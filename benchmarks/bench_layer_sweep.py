@@ -1,0 +1,33 @@
+"""Paper Fig. 8: normalized read/write latency & energy vs 3D layer count
+(2 -> 16 layers, normalized to the 2-layer stack), from the calibrated
+cost model.  Also sweeps the END-TO-END conv cost vs layer count to show
+the paper's parallelism-vs-latency tradeoff (16 layers optimal for 3x3
+given the DESTINY trend, §IV 'Configuration and Simulation')."""
+
+import dataclasses
+
+from repro.core import ConvLayer, cost_3d_reram, normalized_fig8
+from repro.core.mapping3d import Stack3DSpec
+
+
+def run() -> list[tuple[str, float, str]]:
+    results = []
+    for row in normalized_fig8():
+        results.append((
+            f"fig8/layers={row['layers']}", 0.0,
+            f"rd_lat={row['read_latency']:.3f};wr_lat={row['write_latency']:.3f}"
+            f";rd_en={row['read_energy']:.3f};wr_en={row['write_energy']:.3f}"))
+    # End-to-end: time of a 3x3 conv layer vs stack depth (parallelism wins
+    # until the taps fit, then deeper stacks only add access latency).
+    wl = ConvLayer("vgg16_conv3_3", n=256, c=256, h=56, w=56, l=3)
+    for layers in (2, 4, 8, 10, 16):
+        spec = Stack3DSpec(layers=layers)
+        r = cost_3d_reram(wl, spec)
+        results.append((f"fig8/e2e_conv3x3_layers={layers}",
+                        r.time_s * 1e6, f"energy_J={r.energy_j:.3e}"))
+    return results
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

@@ -1,0 +1,47 @@
+"""Insert the regenerated roofline tables and the §Perf cell-C log into
+EXPERIMENTS.md (between the marker comments)."""
+
+import json
+import os
+import re
+
+from . import roofline
+
+
+def perf_cell_c_table() -> str:
+    path = "results/perf/perf_recurrentgemma-2b__train_4k__single.json"
+    if not os.path.exists(path):
+        return "*(pending)*"
+    rows = json.load(open(path))
+    out = ["| stage | t_compute | t_memory | t_collective | bound | temp GiB |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['stage']} | {r['t_compute_s']:.2f} | {r['t_memory_s']:.2f} "
+            f"| {r['t_collective_s']:.2f} | {r['bound_s']:.2f} | "
+            f"{r['temp_GiB']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    cells = roofline.load_cells()
+    table_single = roofline.table(cells, "single")
+    table_multi = roofline.table(cells, "multi")
+    block = ("### Single-pod mesh (16x16 = 256 chips)\n\n" + table_single
+             + "\n\n### Multi-pod mesh (2x16x16 = 512 chips)\n\n" + table_multi)
+
+    md = open("EXPERIMENTS.md").read()
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n### Reading the table)",
+                "<!-- ROOFLINE_TABLE -->\n" + block + "\n",
+                md, flags=re.S)
+    md = re.sub(r"<!-- PERF_CELL_C -->.*?(?=\n---)",
+                "<!-- PERF_CELL_C -->\n" + perf_cell_c_table() + "\n",
+                md, count=1, flags=re.S)
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated:",
+          len([c for c in cells if c.get("status") == "ok"]), "ok cells,",
+          len([c for c in cells if c.get("status") == "skipped"]), "skips")
+
+
+if __name__ == "__main__":
+    main()

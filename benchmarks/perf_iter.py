@@ -1,0 +1,117 @@
+"""§Perf hillclimbing harness: re-lower a dry-run cell with config-knob
+variants and report the roofline-term deltas vs the paper-faithful
+baseline.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen2-72b \
+      --shape train_4k --variant bf16_gather --variant flash_bf16 ...
+
+Each --variant applies a named dataclasses.replace on the ModelConfig
+(see VARIANTS); variants compose left-to-right.  Output: one CSV row per
+cumulative stage with (t_compute, t_memory, t_collective, temp_GiB) so
+EXPERIMENTS.md §Perf can quote before/after per hypothesis.
+"""
+
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import ARCH_IDS  # noqa: E402  (after XLA_FLAGS on purpose)
+
+
+VARIANTS = {
+    # cast the param stack to bf16 before the layer scan -> bf16 FSDP gathers
+    "bf16_gather": dict(cast_params_pre_scan=True),
+    # keep bf16 operands into the flash score dot; bf16 P into the PV dot
+    "flash_bf16": dict(flash_bf16_operands=True, flash_bf16_p=True),
+    # shrink flash blocks under the VMEM-residency threshold
+    "small_blocks": dict(flash_q_chunk=128, flash_kv_chunk=256),
+    "tiny_blocks": dict(flash_q_chunk=64, flash_kv_chunk=128),
+    "big_blocks": dict(flash_q_chunk=1024, flash_kv_chunk=2048),
+    # reshard batch over (pod, data, model) inside attention
+    "attn_batch_shard": dict(attn_batch_shard=True),
+    # shard-local MoE routing (groups aligned with the 32 batch shards)
+    "moe_groups": dict(moe_dispatch_groups=32),
+    # manual shard_map dispatch: batch axes manual, model auto (EP)
+    "moe_shard_map": dict(moe_shard_map=True),
+    # zero-pad MHA heads up to the model-axis size
+    "pad_heads": dict(attn_pad_heads=True),
+    # RG-LRU gate matmuls in bf16 / batch-resharded LRU branch
+    "lru_bf16": dict(lru_bf16_gates=True),
+    "lru_batch_shard": dict(lru_batch_shard=True),
+    # remat policy alternatives
+    "remat_dots": dict(remat="dots"),
+    "remat_none": dict(remat="none"),
+    # unroll instead of scan (HLO size vs pipelining tradeoff)
+    "unroll": dict(scan_layers=False),
+}
+
+
+def run(arch: str, shape: str, variants: list[str], mesh: str = "single",
+        out_dir: str | None = None) -> list[dict]:
+    from repro.launch import dryrun as dr
+    from repro.configs import get_config
+
+    multi = mesh == "multi"
+    rows = []
+
+    base_cfg = get_config(arch)
+    overrides: dict = {}
+    stages = [("baseline", {})] + [(v, VARIANTS[v]) for v in variants]
+    orig_get = dr.get_config
+    try:
+        for name, delta in stages:
+            overrides.update(delta)
+            cfg = dataclasses.replace(base_cfg, **overrides)
+            dr.get_config = lambda _a, _c=cfg: _c
+            cell = dr.run_cell(arch, shape, multi)
+            r = cell.get("roofline", {})
+            row = {
+                "stage": name,
+                "status": cell["status"],
+                "t_compute_s": r.get("t_compute_s"),
+                "t_memory_s": r.get("t_memory_s"),
+                "t_collective_s": r.get("t_collective_s"),
+                "dominant": r.get("dominant"),
+                "bound_s": r.get("roofline_bound_s"),
+                "useful": r.get("useful_flops_ratio"),
+                "temp_GiB": (cell.get("memory", {}).get("temp_bytes", 0)
+                             / 2**30),
+                "overrides": dict(overrides),
+            }
+            rows.append(row)
+            print(f"{name}: dom={row['dominant']} "
+                  f"t=({row['t_compute_s']:.3e},{row['t_memory_s']:.3e},"
+                  f"{row['t_collective_s']:.3e}) bound={row['bound_s']:.3e}s "
+                  f"temp={row['temp_GiB']:.2f}GiB", flush=True)
+    finally:
+        dr.get_config = orig_get
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir,
+                               f"perf_{arch}__{shape}__{mesh}.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--variant", action="append", default=[],
+                    choices=tuple(VARIANTS))
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.variant, args.mesh, args.out)
+
+
+if __name__ == "__main__":
+    main()

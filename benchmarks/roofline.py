@@ -1,0 +1,85 @@
+"""Roofline table builder: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and renders the §Roofline table for EXPERIMENTS.md.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant term,
+MODEL_FLOPS, the useful-flops ratio, and a one-line 'what would move the
+dominant term' note."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ADVICE = {
+    ("compute",): "raise MXU utilization: bigger per-chip tiles / fuse "
+                  "elementwise into matmuls / drop causal-block waste",
+    ("memory",): "cut HBM traffic: more fusion, bf16 residuals, larger "
+                 "attention blocks, activation-recompute instead of spill",
+    ("collective",): "re-shard to cut collectives: 2D-shard the weights, "
+                     "overlap via async collectives, int8-compress the "
+                     "cross-pod hop",
+}
+
+
+def load_cells(out_dir: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def advice_for(cell: dict) -> str:
+    dom = cell["roofline"]["dominant"]
+    return ADVICE[(dom,)]
+
+
+def table(cells: list[dict], mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful ratio | next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | -- | -- | -- | "
+                        f"skipped | -- | -- | {c['reason'][:60]} |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | -- | -- | -- | "
+                        f"ERROR | -- | -- | {c['error'][:60]} |")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['dominant']} | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {advice_for(c)[:70]} |")
+    return "\n".join(rows)
+
+
+def run() -> list[tuple[str, float, str]]:
+    cells = load_cells()
+    results = []
+    for c in cells:
+        tag = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c["status"] != "ok":
+            results.append((tag, 0.0, c["status"]))
+            continue
+        r = c["roofline"]
+        results.append((
+            tag, r["roofline_bound_s"] * 1e6,
+            f"dom={r['dominant']};tc={r['t_compute_s']:.2e}"
+            f";tm={r['t_memory_s']:.2e};tl={r['t_collective_s']:.2e}"
+            f";useful={r['useful_flops_ratio']:.2f}"))
+    return results
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(table(cells, "single"))
+    print()
+    print(table(cells, "multi"))

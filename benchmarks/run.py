@@ -1,0 +1,38 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point:
+
+  table I  -> bench_memtable     fig 8 -> bench_layer_sweep
+  fig 9    -> bench_fig9         §IV-A CPU measurement -> bench_kn2row
+  roofline -> roofline (reads results/dryrun, skipped when absent)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (bench_ablation, bench_fig9, bench_kn2row, bench_layer_sweep,
+               bench_memtable, roofline)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    modules = [bench_memtable, bench_layer_sweep, bench_fig9, bench_kn2row,
+               bench_ablation]
+    if roofline.load_cells():
+        modules.append(roofline)
+    failures = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example (deliverable b): slot-packed prefill + decode
+with KV / recurrent-state caches, greedy and sampled decoding, across
+architecture families (dense KV cache, xLSTM O(1) state, RecurrentGemma
+rotating-window cache).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    for arch in ("smollm-360m", "xlstm-125m", "recurrentgemma-2b"):
+        print(f"\n=== {arch} (reduced config) ===")
+        serve_main(["--arch", arch, "--smoke", "--requests", "4",
+                    "--max-new", "12", "--batch", "2", "--prompt-len", "8"])
+
+
+if __name__ == "__main__":
+    main()

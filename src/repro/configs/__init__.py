@@ -1,0 +1,44 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``.
+
+The ten assigned architectures (plus any local additions) register here;
+``--arch <id>`` in the launchers resolves through this table.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig
+
+_MODULES = {
+    "xlstm-125m": "xlstm_125m",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "smollm-360m": "smollm_360m",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _mod(arch).smoke_config()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

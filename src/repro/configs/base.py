@@ -1,0 +1,181 @@
+"""Config system: one frozen dataclass drives every architecture family.
+
+``ModelConfig`` is the single source of truth consumed by models/, dist/,
+launch/ and the benchmarks.  Each assigned architecture ships a module in
+``repro.configs`` exposing ``CONFIG`` (full size, dry-run only) and
+``smoke_config()`` (reduced, runs on CPU in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "xlstm", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: Family
+    # trunk dimensions
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                      # 0 -> d_model // num_heads
+    # MLP
+    mlp_type: str = "swiglu"               # swiglu | geglu | relu2 | gelu | none
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    attention_window: int = 0              # 0 -> full; >0 -> sliding window
+    # heterogeneous layer patterns: "A"=attn+mlp, "R"=recurrent(RG-LRU),
+    # "s"=sLSTM block, "m"=mLSTM block.  Empty -> homogeneous "A" stack.
+    layer_pattern: str = ""
+    # MoE
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    expert_capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+    # encoder-decoder
+    num_encoder_layers: int = 0            # >0 -> enc-dec; num_layers = decoder
+    # vlm
+    mrope_sections: tuple[int, int, int] = (0, 0, 0)   # (t, h, w) rope splits
+    num_patches: int = 0                   # vision stub: patch embeddings fed in
+    # ssm / hybrid
+    conv_width: int = 4
+    lru_width: int = 0                     # 0 -> d_model
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    mlstm_chunk: int = 64                  # chunkwise-parallel chunk length
+    # norms / embeddings
+    norm_type: str = "rmsnorm"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # training
+    remat: str = "full"                    # none | dots | full
+    # serving
+    max_target_len: int = 8192             # KV-cache capacity for serve_step
+    # distribution hints (see dist/sharding.py)
+    shard_experts: bool = True             # EP over 'model' when divisible
+    scan_layers: bool = True               # scan-over-layers vs unrolled
+    # ---- perf knobs (EXPERIMENTS.md §Perf; all off = paper-faithful baseline)
+    flash_bf16_operands: bool = False      # keep q/k bf16 into the score dot
+    flash_bf16_p: bool = False             # cast exp(p) to bf16 for the PV dot
+    cast_params_pre_scan: bool = False     # bf16-cast param stack BEFORE the
+                                           # layer scan -> FSDP gathers bf16
+    attn_batch_shard: bool = False         # reshard batch over (data x model)
+                                           # inside attention (replicated-head
+                                           # archs regain model-axis compute)
+    flash_q_chunk: int = 512
+    flash_kv_chunk: int = 1024
+    moe_dispatch_groups: int = 0           # >0: shard-local routing/sort in G
+                                           # groups (kills the global argsort
+                                           # collectives; G = batch shards)
+    moe_shard_map: bool = False            # manual shard_map dispatch (batch
+                                           # axes manual, 'model' auto for EP)
+    attn_pad_heads: bool = False           # zero-pad head count up to the
+                                           # model-axis size (MHA archs whose
+                                           # heads don't divide it -- 1.2x
+                                           # padded compute vs Nx replication)
+    lru_bf16_gates: bool = False           # RG-LRU gate matmuls in bf16
+    lru_batch_shard: bool = False          # reshard batch over (pod,data,
+                                           # model) for the LRU branch: gate
+                                           # matmuls + scan go fully local
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError(
+                f"{self.name}: num_heads={self.num_heads} not divisible by "
+                f"num_kv_heads={self.num_kv_heads}"
+            )
+        if self.layer_pattern and len(self.layer_pattern) != self.num_layers:
+            raise ValueError(
+                f"{self.name}: layer_pattern length {len(self.layer_pattern)} "
+                f"!= num_layers {self.num_layers}"
+            )
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.num_encoder_layers > 0
+
+    def pattern(self) -> str:
+        return self.layer_pattern or "A" * self.num_layers
+
+    # ---------------- parameter counting (for roofline MODEL_FLOPS) ---------
+
+    def _mlp_params(self) -> int:
+        if self.mlp_type == "none" or self.d_ff == 0:
+            return 0
+        if self.mlp_type in ("swiglu", "geglu"):
+            return 3 * self.d_model * self.d_ff
+        return 2 * self.d_model * self.d_ff
+
+    def _attn_params(self) -> int:
+        return self.d_model * (self.q_dim + 2 * self.kv_dim) + self.q_dim * self.d_model
+
+    def _block_params(self, kind: str) -> int:
+        d = self.d_model
+        if kind == "A":
+            p = self._attn_params()
+            if self.num_experts > 0:
+                p += self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+            else:
+                p += self._mlp_params()
+            return p
+        if kind == "R":  # RG-LRU temporal block + its own MLP
+            w = self.lru_width
+            p = 2 * d * w + d * w  # x/gate branches in + out proj
+            p += self.conv_width * w + 2 * w * (w // max(self.num_heads, 1)) * self.num_heads
+            p += self._mlp_params()
+            return p
+        if kind == "m":  # mLSTM block
+            di = int(self.d_model * self.mlstm_proj_factor)
+            p = 2 * d * di + di * d          # up (x,z) + down
+            p += self.conv_width * di
+            p += 3 * di * di + 2 * di        # q,k,v + gates (per-head scalars approx)
+            return p
+        if kind == "s":  # sLSTM block + GeGLU proj
+            h = self.d_model
+            p = 4 * d * h + 4 * h * (h // max(self.num_heads, 1)) * self.num_heads
+            dff = int(h * self.slstm_proj_factor)
+            p += 3 * h * dff
+            return p
+        raise ValueError(kind)
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Total (or active, for MoE) non-embedding trunk params + embeddings."""
+        n = 0
+        for kind in self.pattern():
+            if kind == "A" and self.num_experts > 0 and active_only:
+                d = self.d_model
+                n += self._attn_params() + d * self.num_experts
+                n += self.num_experts_per_token * 3 * d * self.d_ff
+            else:
+                n += self._block_params(kind)
+        if self.is_encdec:
+            enc = self._attn_params() + self._mlp_params()
+            dec_cross = self._attn_params()
+            n += self.num_encoder_layers * enc + self.num_layers * dec_cross
+        n += self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        return n

@@ -1,0 +1,31 @@
+"""granite-moe-3b-a800m [moe]: 40 experts top-8, tiny expert d_ff=512.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]  32L d_model=1536 24H (kv=8)
+vocab=49155.  NOTE: the assignment line says "MoE 40e top-8" while its
+trailing comment says 32 experts; the structured spec (40e) wins here."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=512,                        # per-expert FFN width
+    vocab_size=49155,
+    mlp_type="swiglu",
+    num_experts=40,
+    num_experts_per_token=8,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="granite-moe-3b-a800m-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=32, vocab_size=128,
+        num_experts=8, num_experts_per_token=2, max_target_len=64)

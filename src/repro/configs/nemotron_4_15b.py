@@ -1,0 +1,28 @@
+"""nemotron-4-15b [dense]: GQA kv=8, squared-ReLU MLP (non-gated).
+[arXiv:2402.16819; unverified]  32L d_model=6144 48H d_ff=24576 vocab=256000."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_type="relu2",                # Nemotron squared-ReLU
+    qkv_bias=False,
+    rope_theta=10_000.0,
+    norm_type="layernorm",           # Nemotron-4 uses LayerNorm
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="nemotron-4-15b-smoke", num_layers=2, d_model=96,
+        num_heads=8, num_kv_heads=4, head_dim=12, d_ff=192, vocab_size=128,
+        max_target_len=64)

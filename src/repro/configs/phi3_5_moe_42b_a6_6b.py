@@ -1,0 +1,30 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]  32L d_model=4096 32H (kv=8)
+d_ff=6400 vocab=32064."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,                       # per-expert FFN width
+    vocab_size=32064,
+    mlp_type="swiglu",
+    num_experts=16,
+    num_experts_per_token=2,
+    rope_theta=10_000.0,
+    norm_type="layernorm",           # Phi-3.5-MoE uses LayerNorm
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="phi3.5-moe-42b-a6.6b-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=128,
+        num_experts=4, num_experts_per_token=2, max_target_len=64)

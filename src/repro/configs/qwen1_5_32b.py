@@ -1,0 +1,27 @@
+"""qwen1.5-32b [dense]: near-MHA (kv=40), QKV bias, SwiGLU.
+[hf:Qwen/Qwen1.5-0.5B; hf]  64L d_model=5120 40H d_ff=27392 vocab=152064."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    mlp_type="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="qwen1.5-32b-smoke", num_layers=2, d_model=80,
+        num_heads=4, num_kv_heads=4, head_dim=20, d_ff=160, vocab_size=128,
+        max_target_len=64)

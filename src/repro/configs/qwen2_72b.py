@@ -1,0 +1,27 @@
+"""qwen2-72b [dense]: GQA kv=8, QKV bias, SwiGLU.
+[arXiv:2407.10671; hf]  80L d_model=8192 64H d_ff=29568 vocab=152064."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    mlp_type="swiglu",
+    qkv_bias=True,                   # Qwen2 QKV bias
+    rope_theta=1_000_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="qwen2-72b-smoke", num_layers=2, d_model=64,
+        num_heads=8, num_kv_heads=2, head_dim=8, d_ff=160, vocab_size=128,
+        max_target_len=64)

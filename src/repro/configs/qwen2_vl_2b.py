@@ -1,0 +1,32 @@
+"""qwen2-vl-2b [vlm]: M-RoPE decoder backbone, dynamic-resolution vision
+tower stubbed (precomputed patch embeddings via input_specs()).
+[arXiv:2409.12191; hf]  28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936, M-RoPE sections (16, 24, 24)."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    mlp_type="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),     # t/h/w splits of head_dim/2 = 64
+    num_patches=1024,                # default vision-stub prefix length
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="qwen2-vl-2b-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+        mrope_sections=(2, 3, 3), num_patches=16, max_target_len=64)

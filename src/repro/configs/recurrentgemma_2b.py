@@ -1,0 +1,40 @@
+"""recurrentgemma-2b [hybrid]: RG-LRU recurrent blocks + local attention,
+1 attention : 2 recurrent pattern (Griffin).
+[arXiv:2402.19427; hf]  26L d_model=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000, window 2048, head_dim 256."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+# Griffin pattern: (rec, rec, attn) repeating; 26 layers -> 18R + 8A.
+_PATTERN = ("RRA" * 9)[:26]
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,                       # 3x GeGLU expansion
+    vocab_size=256000,
+    mlp_type="geglu",
+    layer_pattern=_PATTERN,
+    attention_window=2048,
+    conv_width=4,
+    lru_width=2560,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    logit_softcap=30.0,
+    scan_layers=False,               # heterogeneous pattern -> unrolled
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="recurrentgemma-2b-smoke", num_layers=6,
+        layer_pattern="RRARRA", d_model=64, num_heads=4, num_kv_heads=1,
+        head_dim=16, d_ff=128, vocab_size=128, lru_width=64,
+        attention_window=8, max_target_len=64)

@@ -1,0 +1,29 @@
+"""seamless-m4t-medium [audio]: encoder-decoder backbone; audio frontend
+stubbed (precomputed frame embeddings via input_specs()).
+[arXiv:2308.11596; hf]  12L d_model=1024 16H (kv=16) d_ff=4096 vocab=256206."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    num_layers=12,                   # decoder layers
+    num_encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    mlp_type="gelu",                 # classic transformer FFN
+    norm_type="layernorm",
+    rope_theta=10_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="seamless-m4t-medium-smoke", num_layers=2,
+        num_encoder_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=128, max_target_len=64)

@@ -1,0 +1,27 @@
+"""smollm-360m [dense]: llama-arch small, GQA kv=5, tied embeddings.
+[hf:HuggingFaceTB/SmolLM-135M; hf]  32L d_model=960 15H d_ff=2560 vocab=49152."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    mlp_type="swiglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="smollm-360m-smoke", num_layers=2, d_model=60,
+        num_heads=3, num_kv_heads=1, head_dim=20, d_ff=128, vocab_size=128,
+        max_target_len=64)

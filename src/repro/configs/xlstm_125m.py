@@ -1,0 +1,34 @@
+"""xlstm-125m [ssm]: sLSTM + mLSTM blocks, 1:1 alternating.
+[arXiv:2405.04517; unverified]  12L d_model=768 4H (GQA kv=4) d_ff=0
+vocab=50304.  d_ff=0: the blocks carry their own up/down projections."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="xlstm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    mlp_type="none",
+    layer_pattern="ms" * 6,          # mLSTM / sLSTM alternating 1:1
+    conv_width=4,
+    mlstm_proj_factor=2.0,
+    slstm_proj_factor=4.0 / 3.0,
+    mlstm_chunk=64,
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    scan_layers=False,               # heterogeneous pattern -> unrolled
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="xlstm-125m-smoke", num_layers=4, layer_pattern="msms",
+        d_model=64, num_heads=4, num_kv_heads=4, vocab_size=128,
+        mlstm_chunk=8, max_target_len=64)

@@ -1,0 +1,42 @@
+"""Core of the reproduction: the paper's MKMC->3D-ReRAM mapping.
+
+  kn2row          -- the conv decomposition algorithm (paper §III.B)
+  crossbar        -- analog crossbar signal-chain simulator (§II.B, §III.C)
+  mapping3d       -- 3D stack mapping + negative-weight separation (§III.C/D)
+  costmodel       -- DESTINY-style latency/energy evaluation (§IV)
+  crossbar_linear -- PIM-mode linear layers for the LM architectures
+"""
+
+from .kn2row import (
+    conv1d_causal_kn2row,
+    conv1d_depthwise_causal,
+    conv1d_depthwise_causal_ref,
+    conv2d_direct,
+    conv2d_im2col,
+    conv2d_kn2row,
+)
+from .crossbar import CrossbarConfig, crossbar_vmm, crossbar_vmm_tiled, opamp_difference
+from .mapping3d import (
+    KernelLayerAssignment,
+    MappingPlan,
+    Stack3DSpec,
+    assign_layers,
+    mkmc_3d,
+    plan_mapping,
+)
+from .costmodel import (
+    ConvLayer,
+    Fig9Result,
+    HardwareConstants,
+    MEMORY_TABLE,
+    PAPER_FIG9,
+    PAPER_WORKLOADS,
+    calibrate,
+    cost_2d_reram,
+    cost_3d_reram,
+    cost_cpu,
+    cost_gpu,
+    evaluate_fig9,
+    normalized_fig8,
+)
+from .crossbar_linear import CrossbarLinearConfig, crossbar_linear, quantization_error

@@ -1,0 +1,177 @@
+"""Numerical simulator for analog ReRAM crossbar vector-matrix multiplication.
+
+Models the signal chain of the paper's crossbars (Fig. 3 / Fig. 7):
+
+  digital input --DAC--> WL voltages --Ohm's law--> per-cell currents
+  --Kirchhoff (shared BLs, eq. 1)--> accumulated BL currents
+  --op-amp I_p - I_n (paper's negative-weight separation)--> signed current
+  --ADC--> digital output
+
+Two signed-weight schemes are modelled:
+
+  * ``differential``  -- the conventional baseline: every weight uses TWO
+    memristors (G+ holds max(w,0), G- holds max(-w,0)); doubles cell count
+    and the two columns are subtracted after the array.
+  * ``separated``     -- the paper's contribution: weights are PARTITIONED
+    into a negative group and a non-negative group (per kernel / per output
+    column), mapped to disjoint layer/plane sets, accumulated separately in
+    analog (I_n, I_p) and subtracted by one inverting op-amp (Fig. 7e).
+    Cell count stays 1x; only the group sums need the subtractor.
+
+Both schemes are numerically exact in infinite precision; they differ in
+*which* quantization noise they see (the separated scheme quantizes I_p and
+I_n with the same ADC range but half the conversions of a per-tap digital
+accumulation) and in the cost model (cells, ADC conversions, op-amps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Scheme = Literal["differential", "separated", "ideal"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarConfig:
+    """Quantization / signal-chain parameters for the simulator.
+
+    The defaults follow the paper's setup: multi-bit ReRAM cells and
+    DAC/ADC resolutions in the range used by ISAAC-class designs (the paper
+    cites Murmann's ADC survey for converter figures).
+    """
+
+    weight_bits: int = 8        # conductance levels per memristor = 2^bits - 1
+    dac_bits: int = 8           # input voltage levels
+    adc_bits: int = 10          # output current levels
+    scheme: Scheme = "separated"
+    g_on_off_ratio: float = 1e3  # R_off / R_on; bounds the min conductance
+    read_noise_sigma: float = 0.0  # relative lognormal-ish read noise (off by default)
+
+    def __post_init__(self):
+        if self.weight_bits < 1 or self.dac_bits < 1 or self.adc_bits < 1:
+            raise ValueError("bit widths must be >= 1")
+
+
+def _quantize_unsigned(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Uniform quantization of non-negative x onto [0, scale] with 2^bits - 1 steps."""
+    levels = (1 << bits) - 1
+    safe = jnp.maximum(scale, 1e-30)
+    q = jnp.round(jnp.clip(x / safe, 0.0, 1.0) * levels) / levels
+    return q * safe
+
+
+def _quantize_signed(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Uniform symmetric quantization of x onto [-scale, scale]."""
+    levels = (1 << bits) - 1
+    safe = jnp.maximum(scale, 1e-30)
+    q = jnp.round(jnp.clip(x / safe, -1.0, 1.0) * levels) / levels
+    return q * safe
+
+
+def program_conductances(
+    w: jax.Array, cfg: CrossbarConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Map a signed weight matrix (rows=WL inputs, cols=BL outputs) to
+    non-negative conductance matrices (G_pos, G_neg) plus the weight scale.
+
+    Conductances are normalized to [0, 1] (units of g_max); the digital
+    post-scale restores magnitudes.  The finite on/off ratio makes exact
+    zero unreachable: g_min = 1 / on_off_ratio."""
+    w_scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-30)
+    g_min = 1.0 / cfg.g_on_off_ratio
+    pos = _quantize_unsigned(jnp.maximum(w, 0.0) / w_scale, cfg.weight_bits, jnp.asarray(1.0))
+    neg = _quantize_unsigned(jnp.maximum(-w, 0.0) / w_scale, cfg.weight_bits, jnp.asarray(1.0))
+    # Cells that should be "off" still leak g_min: model as clamping from below.
+    g_pos = jnp.where(pos > 0, jnp.maximum(pos, g_min), g_min)
+    g_neg = jnp.where(neg > 0, jnp.maximum(neg, g_min), g_min)
+    return g_pos, g_neg, w_scale
+
+
+def dac_quantize(x: jax.Array, cfg: CrossbarConfig) -> tuple[jax.Array, jax.Array]:
+    """Digital inputs -> WL voltage levels (signed handled by bipolar drive)."""
+    x_scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    v = _quantize_signed(x / x_scale, cfg.dac_bits, jnp.asarray(1.0))
+    return v, x_scale
+
+
+def adc_quantize(i: jax.Array, cfg: CrossbarConfig, i_range: jax.Array) -> jax.Array:
+    """BL currents -> digital codes.  Range is the analog full-scale of the
+    column (worst-case sum), shared across the batch as real ADCs are."""
+    return _quantize_signed(i, cfg.adc_bits, i_range)
+
+
+def crossbar_vmm(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CrossbarConfig = CrossbarConfig(),
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Simulated analog VMM:  out = x @ w  through the crossbar signal chain.
+
+    x: (..., k) digital inputs; w: (k, m) signed weights.
+    Returns (..., m) digital outputs after DAC/conductance/ADC quantization.
+    """
+    if w.ndim != 2 or x.shape[-1] != w.shape[0]:
+        raise ValueError(f"bad shapes x={x.shape} w={w.shape}")
+    if cfg.scheme == "ideal":
+        return x @ w
+
+    g_pos, g_neg, w_scale = program_conductances(w, cfg)
+    v, x_scale = dac_quantize(x, cfg)
+
+    if cfg.read_noise_sigma > 0.0:
+        if key is None:
+            raise ValueError("read_noise_sigma > 0 requires a PRNG key")
+        kp, kn = jax.random.split(key)
+        g_pos = g_pos * (1.0 + cfg.read_noise_sigma * jax.random.normal(kp, g_pos.shape))
+        g_neg = g_neg * (1.0 + cfg.read_noise_sigma * jax.random.normal(kn, g_neg.shape))
+
+    # Ohm + Kirchhoff: column currents for each group.  In the 'separated'
+    # scheme the groups live on disjoint current-plane sets of ONE array
+    # (cells = k*m); in 'differential' each weight owns two cells (2*k*m).
+    i_p = v @ g_pos
+    i_n = v @ g_neg
+    # Op-amp subtraction (Fig. 7e): I2 = I_p - I_n, still analog.
+    i_diff = i_p - i_n
+    # ADC full-scale: worst-case column current (per-column calibration).
+    i_range = jnp.maximum(
+        jnp.sum(g_pos, axis=0).max(), jnp.sum(g_neg, axis=0).max()
+    ) * jnp.asarray(1.0)
+    out = adc_quantize(i_diff, cfg, i_range)
+    return out * (w_scale * x_scale)
+
+
+def crossbar_vmm_tiled(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CrossbarConfig = CrossbarConfig(),
+    *,
+    tile_k: int = 128,
+    tile_m: int = 128,
+) -> jax.Array:
+    """VMM through an array of finite (tile_k x tile_m) crossbars.
+
+    Real arrays are bounded (the paper's planes hold c WLs x n BLs); larger
+    operands tile across crossbars with digital accumulation over the k tiles
+    (each k-tile's partial goes through its own ADC -- this is what the cost
+    model charges)."""
+    k, m = w.shape
+    out = jnp.zeros((*x.shape[:-1], m), dtype=jnp.result_type(x.dtype, w.dtype))
+    for k0 in range(0, k, tile_k):
+        k1 = min(k0 + tile_k, k)
+        for m0 in range(0, m, tile_m):
+            m1 = min(m0 + tile_m, m)
+            part = crossbar_vmm(x[..., k0:k1], w[k0:k1, m0:m1], cfg)
+            out = out.at[..., m0:m1].add(part)
+    return out
+
+
+def opamp_difference(i_p: jax.Array, i_n: jax.Array) -> jax.Array:
+    """The inverting op-amp of Fig. 7(e), proved in the paper:
+    I0 = I_n, V0 = I_n*R0, V1 = -I_n*R0, I1 = -I_n, I2 = I_p - I_n."""
+    return i_p - i_n

@@ -1,0 +1,59 @@
+"""CrossbarLinear: run any LM linear projection through the simulated
+ReRAM crossbar (PIM-style analog inference mode).
+
+This is how the paper's technique becomes a first-class feature for the
+assigned LM architectures whose compute is linear projections rather than
+convolutions: weights are programmed onto (tiled) crossbars with the
+paper's negative-weight separation scheme, inputs go through DACs, outputs
+through op-amp subtraction + ADCs.  Used by the accuracy-equivalence
+experiments (the paper claims "3D ReRAM achieves the same inference
+accuracy as our baseline") and by ``examples/edge_detect_crossbar.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .crossbar import CrossbarConfig, crossbar_vmm_tiled
+from .mapping3d import Stack3DSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarLinearConfig:
+    xbar: CrossbarConfig = CrossbarConfig()
+    spec: Stack3DSpec = Stack3DSpec()
+
+
+def crossbar_linear(
+    x: jax.Array,
+    weight: jax.Array,
+    bias: jax.Array | None = None,
+    cfg: CrossbarLinearConfig = CrossbarLinearConfig(),
+) -> jax.Array:
+    """y = x @ weight (+ bias) through the crossbar simulator.
+
+    x: (..., d_in); weight: (d_in, d_out).  Tiles of
+    (wl_per_plane x bl_per_plane) match the physical plane capacity."""
+    out = crossbar_vmm_tiled(
+        x.astype(jnp.float32),
+        weight.astype(jnp.float32),
+        cfg.xbar,
+        tile_k=cfg.spec.wl_per_plane,
+        tile_m=cfg.spec.bl_per_plane,
+    )
+    if bias is not None:
+        out = out + bias
+    return out.astype(x.dtype)
+
+
+def quantization_error(
+    x: jax.Array, weight: jax.Array, cfg: CrossbarLinearConfig = CrossbarLinearConfig()
+) -> jax.Array:
+    """Relative L2 error of the crossbar path vs exact matmul (the accuracy-
+    equivalence metric used in tests)."""
+    exact = x.astype(jnp.float32) @ weight.astype(jnp.float32)
+    approx = crossbar_linear(x, weight, None, cfg).astype(jnp.float32)
+    return jnp.linalg.norm(approx - exact) / jnp.maximum(jnp.linalg.norm(exact), 1e-30)

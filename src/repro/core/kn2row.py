@@ -1,0 +1,191 @@
+"""kn2row-style convolution: the paper's core algorithm (Anderson et al. [9]).
+
+An l1 x l2 convolution of a (c, h, w) image with (n, c, l1, l2) kernels is
+decomposed into l1*l2 independent 1x1 convolutions -- each a pure GEMM
+[n, c] @ [c, h*w] -- whose partial output maps are *superimposed* (shifted and
+accumulated) into the final (n, h, w) output.  In the paper the
+superimposition is free in the analog domain (Kirchhoff accumulation across
+shared bit lines, eq. 1); on TPU the analogue is accumulating the shifted
+partials in fast memory (VMEM scratch in the Pallas kernel, registers here)
+so the l1*l2 partial maps are never materialized in HBM.
+
+This module is the pure-jnp reference layer:
+  * ``conv2d_kn2row``      -- the paper's algorithm (NCHW, stride 1)
+  * ``conv2d_im2col``      -- the "traditional MKMC" baseline the paper
+                              argues against (materializes the unrolled
+                              [c*l1*l2, h*w] image matrix)
+  * ``conv2d_direct``      -- lax.conv_general_dilated oracle
+  * ``conv1d_causal_kn2row`` / ``conv1d_depthwise_causal`` -- the 1-D causal
+    specialization used inside the xLSTM / RecurrentGemma blocks.
+
+Convention: cross-correlation (as in every DL framework), 'SAME' or 'VALID'
+padding, stride 1 (the paper's mapping streams one image column per logical
+cycle, i.e. stride 1; strided variants are handled by output subsampling).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Padding = Literal["SAME", "VALID"]
+
+
+def _check_conv_args(image: jax.Array, kernel: jax.Array) -> None:
+    if image.ndim != 4:
+        raise ValueError(f"image must be (b, c, h, w), got {image.shape}")
+    if kernel.ndim != 4:
+        raise ValueError(f"kernel must be (n, c, l1, l2), got {kernel.shape}")
+    if image.shape[1] != kernel.shape[1]:
+        raise ValueError(
+            f"channel mismatch: image c={image.shape[1]} kernel c={kernel.shape[1]}"
+        )
+
+
+def conv2d_direct(
+    image: jax.Array, kernel: jax.Array, *, padding: Padding = "SAME"
+) -> jax.Array:
+    """Oracle: XLA's native convolution. image (b,c,h,w), kernel (n,c,l1,l2)."""
+    _check_conv_args(image, kernel)
+    return lax.conv_general_dilated(
+        image,
+        kernel,
+        window_strides=(1, 1),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_im2col(
+    image: jax.Array, kernel: jax.Array, *, padding: Padding = "SAME"
+) -> jax.Array:
+    """Traditional MKMC via im2col: unroll kernels into rows of a [n, c*l1*l2]
+    matrix and image patches into columns of a [c*l1*l2, oh*ow] matrix.
+
+    This is the baseline the paper rejects for 3D ReRAM: the unrolled image
+    matrix is l1*l2 times larger than the image, and the structure cannot use
+    the shared-BL accumulation (eq. 1)."""
+    _check_conv_args(image, kernel)
+    b, c, h, w = image.shape
+    n, _, l1, l2 = kernel.shape
+    if padding == "SAME":
+        ph_lo, ph_hi = (l1 - 1) // 2, l1 // 2
+        pw_lo, pw_hi = (l2 - 1) // 2, l2 // 2
+        image = jnp.pad(image, ((0, 0), (0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi)))
+        oh, ow = h, w
+    else:
+        oh, ow = h - l1 + 1, w - l2 + 1
+    # Extract patches: (b, c*l1*l2, oh*ow).
+    patches = lax.conv_general_dilated_patches(
+        image,
+        filter_shape=(l1, l2),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (b, c*l1*l2, oh, ow)
+    patches = patches.reshape(b, c * l1 * l2, oh * ow)
+    kmat = kernel.reshape(n, c * l1 * l2)
+    out = jnp.einsum("nk,bkp->bnp", kmat, patches)
+    return out.reshape(b, n, oh, ow)
+
+
+def conv2d_kn2row(
+    image: jax.Array, kernel: jax.Array, *, padding: Padding = "SAME"
+) -> jax.Array:
+    """The paper's algorithm: l1*l2 separate 1x1 GEMMs + shift-accumulate.
+
+    For tap (dy, dx): partial = K[:, :, dy, dx] @ I  (a [n,c] x [c,h*w] GEMM),
+    then the partial map is shifted by the tap offset and accumulated.  The
+    accumulation is the analog superimposition of paper eq. (1)."""
+    _check_conv_args(image, kernel)
+    b, c, h, w = image.shape
+    n, _, l1, l2 = kernel.shape
+    if padding == "SAME":
+        oh, ow = h, w
+        oy0, ox0 = (l1 - 1) // 2, (l2 - 1) // 2
+    else:
+        oh, ow = h - l1 + 1, w - l2 + 1
+        oy0, ox0 = 0, 0
+
+    acc = jnp.zeros((b, n, oh, ow), dtype=jnp.result_type(image.dtype, kernel.dtype))
+    for dy in range(l1):
+        for dx in range(l2):
+            tap = kernel[:, :, dy, dx]  # (n, c) -- one memristor layer
+            partial = jnp.einsum("nc,bchw->bnhw", tap, image)  # 1x1 conv GEMM
+            # Superimpose: out[y, x] += partial[y + dy - oy0, x + dx - ox0].
+            sy, sx = dy - oy0, dx - ox0
+            src_y0, src_x0 = max(sy, 0), max(sx, 0)
+            dst_y0, dst_x0 = max(-sy, 0), max(-sx, 0)
+            ny = min(h - src_y0, oh - dst_y0)
+            nx = min(w - src_x0, ow - dst_x0)
+            if ny <= 0 or nx <= 0:
+                continue
+            acc = acc.at[:, :, dst_y0 : dst_y0 + ny, dst_x0 : dst_x0 + nx].add(
+                partial[:, :, src_y0 : src_y0 + ny, src_x0 : src_x0 + nx]
+            )
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# 1-D causal specialization (used by xLSTM / RecurrentGemma blocks).
+# ---------------------------------------------------------------------------
+
+
+def conv1d_depthwise_causal(x: jax.Array, weight: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d via the kn2row decomposition.
+
+    x: (b, t, c); weight: (l, c).  out[t, c] = sum_i w[i, c] * x[t - l + 1 + i, c]
+    -- i.e. tap i of the kernel is a diagonal 1x1 'GEMM' (elementwise scale),
+    shifted in time and accumulated.  This is the exact 1-D analogue of the
+    paper's mapping: each tap occupies one memristor layer and the shared-BL
+    accumulation sums the shifted partials."""
+    if x.ndim != 3 or weight.ndim != 2 or x.shape[-1] != weight.shape[-1]:
+        raise ValueError(f"bad shapes x={x.shape} w={weight.shape}")
+    l = weight.shape[0]
+    t = x.shape[1]
+    acc = jnp.zeros_like(x, dtype=jnp.result_type(x.dtype, weight.dtype))
+    for i in range(l):
+        shift = l - 1 - i  # tap i reads x[t - shift]
+        if shift == 0:
+            acc = acc + x * weight[i]
+        elif shift < t:
+            acc = acc.at[:, shift:, :].add(x[:, : t - shift, :] * weight[i])
+    return acc.astype(x.dtype)
+
+
+def conv1d_causal_kn2row(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Dense causal conv1d via kn2row: kernel (l, c_in, c_out); x (b, t, c_in).
+
+    out[t, :] = sum_i x[t - l + 1 + i, :] @ kernel[i]  -- l shifted GEMMs."""
+    if x.ndim != 3 or kernel.ndim != 3 or x.shape[-1] != kernel.shape[1]:
+        raise ValueError(f"bad shapes x={x.shape} k={kernel.shape}")
+    l, _, c_out = kernel.shape
+    b, t, _ = x.shape
+    acc = jnp.zeros((b, t, c_out), dtype=jnp.result_type(x.dtype, kernel.dtype))
+    for i in range(l):
+        partial = jnp.einsum("btc,cd->btd", x, kernel[i])
+        shift = l - 1 - i
+        if shift == 0:
+            acc = acc + partial
+        elif shift < t:
+            acc = acc.at[:, shift:, :].add(partial[:, : t - shift, :])
+    return acc.astype(x.dtype)
+
+
+def conv1d_depthwise_causal_ref(x: jax.Array, weight: jax.Array) -> jax.Array:
+    """Oracle for the depthwise causal conv via explicit padding + windows."""
+    l, c = weight.shape
+    xp = jnp.pad(x, ((0, 0), (l - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.result_type(x.dtype, weight.dtype))
+    for i in range(l):
+        out = out + xp[:, i : i + x.shape[1], :] * weight[i]
+    return out.astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("padding",))
+def conv2d_kn2row_jit(image, kernel, *, padding: Padding = "SAME"):
+    return conv2d_kn2row(image, kernel, padding=padding)

@@ -1,0 +1,2 @@
+"""Data pipelines."""
+from .pipeline import DataConfig, SyntheticLM, TokenFileLM, make_pipeline

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper, interpret fallback on CPU) and ref.py (pure-jnp oracle);
+tests sweep shapes/dtypes against the oracle in interpret mode.
+"""
+from .kn2row.ops import kn2row_conv
+from .conv1d.ops import conv1d_causal
+from .crossbar_vmm.ops import crossbar_linear_pallas, crossbar_vmm
+from .flash.ops import flash_attention

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused causal depthwise conv1d (kn2row 1-D form).
+
+The 1-D specialization of the paper's mapping used inside the xLSTM and
+RG-LRU blocks: each of the `l` taps is a diagonal plane; the shifted
+partials accumulate in VMEM and hit HBM once.  VPU (elementwise) work.
+
+Layout: x pre-padded left by l-1: (b, t + l - 1, c); weight (l, c).
+Grid = (b, t_tiles, c_tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_hbm, w_ref, out_ref, *, l, tt, ct):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    acc = jnp.zeros((tt, ct), jnp.float32)
+    # Tap i reads x[t - (l - 1) + i]; with left-pad l-1 the slab for output
+    # tile start T0 is x_padded[T0 + i : T0 + i + TT].
+    for i in range(l):
+        slab = pl.load(
+            x_hbm,
+            (bi, pl.dslice(ti * tt + i, tt), pl.dslice(ci * ct, ct)))
+        acc += slab.astype(jnp.float32) * w_ref[i].astype(jnp.float32)
+    out_ref[...] = acc.reshape(out_ref.shape).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("l", "tt", "ct", "interpret"))
+def conv1d_causal_padded(
+    x_padded: jax.Array,     # (b, t + l - 1, c)
+    weight: jax.Array,       # (l, c)
+    *,
+    l: int,
+    tt: int = 128,
+    ct: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, tp, c = x_padded.shape
+    t = tp - l + 1
+    if t % tt or c % ct:
+        raise ValueError(f"(t={t}, c={c}) not divisible by tiles ({tt}, {ct})")
+    return pl.pallas_call(
+        functools.partial(_kernel, l=l, tt=tt, ct=ct),
+        grid=(b, t // tt, c // ct),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),          # overlapping slabs
+            pl.BlockSpec((l, ct), lambda bi, ti, ci: (0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, tt, ct), lambda bi, ti, ci: (bi, ti, ci)),
+        out_shape=jax.ShapeDtypeStruct((b, t, c), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded, weight)

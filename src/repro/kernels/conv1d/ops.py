@@ -1,0 +1,33 @@
+"""jit wrapper for the causal conv1d kernel: padding, tiles, interpret."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import conv1d_causal_padded
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def conv1d_causal(
+    x: jax.Array,          # (b, t, c)
+    weight: jax.Array,     # (l, c)
+    *,
+    tt: int | None = None,
+    ct: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, c = x.shape
+    l = weight.shape[0]
+    tt = tt or min(128, t)
+    ct = ct or min(128, c)
+    tp, cp = _round_up(t, tt), _round_up(c, ct)
+    xp = jnp.pad(x, ((0, 0), (l - 1, tp - t), (0, cp - c)))
+    wp = jnp.pad(weight, ((0, 0), (0, cp - c)))
+    out = conv1d_causal_padded(xp, wp, l=l, tt=tt, ct=ct, interpret=interpret)
+    return out[:, :t, :c]

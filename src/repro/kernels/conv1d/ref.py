@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the causal conv1d kernel."""
+
+from ...core.kn2row import conv1d_depthwise_causal_ref
+
+
+def conv1d_causal_ref(x, weight):
+    """x (b, t, c), weight (l, c) -> (b, t, c)."""
+    return conv1d_depthwise_causal_ref(x, weight)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: crossbar VMM with negative-weight separation.
+
+The MXU rendition of the paper's signal chain (§III.C/D): the positive
+and negative conductance planes multiply the (DAC-quantized) drive
+matrix, the two partial currents accumulate in VMEM across k-tiles
+(Kirchhoff along the bit line), the op-amp subtraction I_p - I_n and the
+single ADC quantization happen IN VMEM on the final k step -- one HBM
+writeback per output, no per-tap conversions (the 3D design's energy
+story, here the memory-traffic story).
+
+Grid = (m_tiles, n_tiles, k_tiles), k innermost (revisiting accumulate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(v_ref, gp_ref, gn_ref, irange_ref, out_ref, accp, accn,
+            *, adc_levels):
+    kc = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kc == 0)
+    def _init():
+        accp[...] = jnp.zeros_like(accp)
+        accn[...] = jnp.zeros_like(accn)
+
+    v = v_ref[...].astype(jnp.float32)
+    accp[...] += jax.lax.dot(v, gp_ref[...].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+    accn[...] += jax.lax.dot(v, gn_ref[...].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(kc == nk - 1)
+    def _opamp_adc():
+        i_diff = accp[...] - accn[...]            # op-amp: I2 = I_p - I_n
+        fs = irange_ref[0]                        # ADC full-scale current
+        q = jnp.round(jnp.clip(i_diff / fs, -1.0, 1.0) * adc_levels) / adc_levels
+        out_ref[...] = (q * fs).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("adc_bits", "tm", "tn", "tk", "interpret"))
+def crossbar_vmm_pallas(
+    v: jax.Array,         # (m, k) DAC-quantized drive
+    g_pos: jax.Array,     # (k, n) non-negative conductances
+    g_neg: jax.Array,     # (k, n)
+    i_range: jax.Array,   # (1,) ADC full-scale
+    *,
+    adc_bits: int = 10,
+    tm: int = 128,
+    tn: int = 128,
+    tk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = v.shape
+    _, n = g_pos.shape
+    if m % tm or n % tn or k % tk:
+        raise ValueError(f"(m={m}, k={k}, n={n}) not divisible by "
+                         f"({tm}, {tk}, {tn}); ops.py pads first")
+    adc_levels = (1 << adc_bits) - 1
+    return pl.pallas_call(
+        functools.partial(_kernel, adc_levels=adc_levels),
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kc: (i, kc)),
+            pl.BlockSpec((tk, tn), lambda i, j, kc: (kc, j)),
+            pl.BlockSpec((tk, tn), lambda i, j, kc: (kc, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kc: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32),
+                        pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(v, g_pos, g_neg, i_range)

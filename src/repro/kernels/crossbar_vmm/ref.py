@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: the same signal chain as core.crossbar, unfused."""
+
+import jax.numpy as jnp
+
+
+def crossbar_vmm_ref(v, g_pos, g_neg, i_range, adc_bits: int = 10):
+    ip = v.astype(jnp.float32) @ g_pos.astype(jnp.float32)
+    i_n = v.astype(jnp.float32) @ g_neg.astype(jnp.float32)
+    i_diff = ip - i_n
+    levels = (1 << adc_bits) - 1
+    fs = i_range.reshape(())
+    q = jnp.round(jnp.clip(i_diff / fs, -1.0, 1.0) * levels) / levels
+    return q * fs

@@ -1,0 +1,49 @@
+"""jit wrapper: GQA expansion, (b, h, s, d) public layout, padding,
+interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+def flash_attention(
+    q: jax.Array,      # (b, hq, sq, d)
+    k: jax.Array,      # (b, hkv, skv, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    tq: int | None = None,
+    tk: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    if g > 1:  # GQA: expand kv heads (kernel is MHA-shaped)
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    tq = tq or min(128, sq)
+    tk = tk or min(128, skv)
+    sqp, skp = _round_up(sq, tq), _round_up(skv, tk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0))).reshape(b * hq, sqp, d)
+    # Pad KEYS so padded positions never win the softmax: since queries at
+    # padded rows are discarded and causal masking handles kpos > qpos,
+    # only non-causal padding needs care -- mask via large-negative k? We
+    # instead rely on padded kpos > any real qpos under causal=True, and
+    # for causal=False we pad skv only when necessary and mask below.
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - skv), (0, 0))).reshape(b * hq, skp, d)
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - skv), (0, 0))).reshape(b * hq, skp, d)
+    if not causal and skp != skv:
+        raise ValueError("non-causal flash requires skv divisible by tk")
+    out = flash_attention_bhsd(qp, kp, vp, causal=causal, tq=tq, tk=tk,
+                               interpret=interpret)
+    return out.reshape(b, hq, sqp, d)[:, :, :sq]

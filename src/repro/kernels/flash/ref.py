@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q/k/v: (bh, s, d) -> (bh, sq, d), fp32 softmax."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(kpos <= qpos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused kn2row multi-channel convolution.
+
+The paper's mapping, transliterated to the TPU memory hierarchy: each of
+the l1*l2 kernel taps is a [C, N] matmul plane (one "memristor layer");
+the tap partials for an output tile are accumulated in a fp32 VMEM
+scratch (the analog current-plane superimposition of paper eq. (1)) and
+written back to HBM exactly once -- the l1*l2 partial feature maps never
+exist in HBM, which is the whole point of the 3D mapping.
+
+Layout: image NHWC, pre-padded by ops.py to (b, h+l1-1, w+l2-1, c);
+weights reshaped to (l1*l2, c, n).  Grid = (b, h_tiles, w_tiles,
+c_tiles); the c (k-dim) tiles revisit the same output tile, innermost,
+accumulating; the tap loop is unrolled inside the kernel (static l1*l2,
+the "stack depth").  MXU work per grid step: l1*l2 GEMMs of
+[TH*TW, CT] x [CT, N].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(in_hbm, w_ref, out_ref, acc_ref, *, l1, l2, th, tw, ct, c_total):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    tj = pl.program_id(2)
+    kc = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kc == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # One tap = one "memristor layer": shifted input slab x [CT, N] weights,
+    # superimposed into the VMEM accumulator (eq. (1) analogue).
+    for dy in range(l1):
+        for dx in range(l2):
+            tap = dy * l2 + dx
+            slab = pl.load(
+                in_hbm,
+                (bi,
+                 pl.dslice(ti * th + dy, th),
+                 pl.dslice(tj * tw + dx, tw),
+                 pl.dslice(kc * ct, ct)),
+            )  # (TH, TW, CT)
+            mat = slab.reshape(th * tw, ct).astype(jnp.float32)
+            acc_ref[...] += jax.lax.dot(
+                mat, w_ref[tap].astype(jnp.float32),
+                precision=jax.lax.Precision.DEFAULT,
+                preferred_element_type=jnp.float32)
+
+    @pl.when(kc == nk - 1)
+    def _write():
+        out_ref[...] = acc_ref[...].reshape(out_ref.shape).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("l1", "l2", "th", "tw", "ct", "interpret"))
+def kn2row_conv_padded(
+    image_padded: jax.Array,   # (b, h + l1 - 1, w + l2 - 1, c) NHWC
+    weights: jax.Array,        # (l1*l2, c, n)
+    *,
+    l1: int,
+    l2: int,
+    th: int = 8,
+    tw: int = 16,
+    ct: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hp, wp, c = image_padded.shape
+    taps, _, n = weights.shape
+    h, w = hp - l1 + 1, wp - l2 + 1
+    if taps != l1 * l2:
+        raise ValueError(f"weights taps {taps} != l1*l2 {l1 * l2}")
+    if h % th or w % tw or c % ct:
+        raise ValueError(f"(h={h}, w={w}, c={c}) not divisible by tiles "
+                         f"({th}, {tw}, {ct}); ops.py pads first")
+
+    grid = (b, h // th, w // tw, c // ct)
+    kernel = functools.partial(_kernel, l1=l1, l2=l2, th=th, tw=tw, ct=ct,
+                               c_total=c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Full padded image stays in HBM/ANY; taps use dynamic slices
+            # (overlapping slabs cannot be expressed as disjoint blocks).
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            # Weight plane stack: all taps for this c-tile, resident in VMEM.
+            pl.BlockSpec((taps, ct, n), lambda bi, i, j, kc: (0, kc, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, th, tw, n), lambda bi, i, j, kc: (bi, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, n), image_padded.dtype),
+        scratch_shapes=[pltpu.VMEM((th * tw, n), jnp.float32)],
+        interpret=interpret,
+    )(image_padded, weights)

@@ -1,0 +1,56 @@
+"""jit wrapper for the kn2row kernel: NCHW public API, padding/layout
+management, tile-size selection, CPU interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import kn2row_conv_padded
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def kn2row_conv(
+    image: jax.Array,      # (b, c, h, w)
+    kernel: jax.Array,     # (n, c, l1, l2)
+    *,
+    th: int | None = None,
+    tw: int | None = None,
+    ct: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """SAME-padding stride-1 MKMC convolution via the fused Pallas kernel.
+
+    Handles layout (NCHW <-> NHWC), SAME padding, and pads h/w/c up to tile
+    multiples (masked back off afterwards)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, c, h, w = image.shape
+    n, _, l1, l2 = kernel.shape
+
+    th = th or min(8, h)
+    tw = tw or min(128 if w >= 128 else 16, w)
+    ct = ct or min(128, c)
+
+    hp, wp, cp = _round_up(h, th), _round_up(w, tw), _round_up(c, ct)
+    # NHWC + SAME halo + tile padding.
+    x = jnp.transpose(image, (0, 2, 3, 1))
+    x = jnp.pad(x, ((0, 0),
+                    ((l1 - 1) // 2, l1 // 2 + (hp - h)),
+                    ((l2 - 1) // 2, l2 // 2 + (wp - w)),
+                    (0, 0, ) if cp == c else (0, cp - c)))
+    wmat = jnp.transpose(kernel, (2, 3, 1, 0)).reshape(l1 * l2, c, n)
+    if cp != c:
+        wmat = jnp.pad(wmat, ((0, 0), (0, cp - c), (0, 0)))
+
+    out = kn2row_conv_padded(x, wmat, l1=l1, l2=l2, th=th, tw=tw, ct=ct,
+                             interpret=interpret)
+    out = out[:, :h, :w, :]
+    return jnp.transpose(out, (0, 3, 1, 2))

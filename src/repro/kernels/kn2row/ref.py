@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the kn2row Pallas kernel (NCHW public interface)."""
+
+import jax
+
+from ...core.kn2row import conv2d_direct
+
+
+def kn2row_conv_ref(image: jax.Array, kernel: jax.Array) -> jax.Array:
+    """image (b, c, h, w), kernel (n, c, l1, l2) -> (b, n, h, w), SAME."""
+    return conv2d_direct(image, kernel, padding="SAME")

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, build the production mesh,
+attach shardings, ``.lower().compile()`` the right step function
+(train_step / prefill_step / serve_step), and record:
+
+  * memory_analysis()      -- per-device bytes: proves the cell fits
+  * cost_analysis()        -- per-device HLO FLOPs / bytes accessed
+  * collective bytes       -- parsed from the partitioned HLO, with ring
+                              algorithm factors per collective kind
+  * the three roofline terms (§Roofline) on v5e constants
+
+Single-pod mesh (16, 16) = 256 chips feeds the roofline table; the
+multi-pod mesh (2, 16, 16) = 512 chips proves the 'pod' axis shards.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..launch import hlo_cost
+from ..launch import steps as steps_mod
+from ..launch.mesh import make_production_mesh
+from ..train.train_loop import make_train_step
+
+# ------------------------- TPU v5e roofline constants ------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, 1 link active)
+
+_COLL_RE = re.compile(
+    r"= (\([^)]*\)|\S+) (all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+_GROUP_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "s8": 1, "u8": 1, "pred": 1}
+_BYTES_DEFAULT = 1
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _BYTES.get(dtype, _BYTES_DEFAULT)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective link traffic from the partitioned HLO.
+
+    The compiled HLO prints shapes on the RESULT only; per kind, ring-
+    algorithm link bytes per device in terms of the result size R and
+    group size k:
+      all-gather      R(k-1)/k      (operand = R/k, sent k-1 times)
+      reduce-scatter  R(k-1)        (operand = R*k scattered)
+      all-reduce      2R(k-1)/k     (RS + AG phases)
+      all-to-all      R(k-1)/k
+      collective-permute  R
+    """
+    per_kind: dict[str, float] = {}
+    per_kind_raw: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        result, kind = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result))
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start(): line_end if line_end > 0 else m.end() + 500]
+        k = 2
+        g = _GROUP_EXPL_RE.search(line)
+        if g:
+            k = len(g.group(1).split(","))
+        else:
+            g = _GROUP_IOTA_RE.search(line)
+            if g:
+                k = int(g.group(2))
+        factor = {"all-reduce": 2 * (k - 1) / k,
+                  "all-gather": (k - 1) / k,
+                  "reduce-scatter": float(k - 1),
+                  "all-to-all": (k - 1) / k,
+                  "collective-permute": 1.0}[kind]
+        per_kind[kind] = per_kind.get(kind, 0.0) + nbytes * factor
+        per_kind_raw[kind] = per_kind_raw.get(kind, 0.0) + nbytes
+    return {"link_bytes_per_device": sum(per_kind.values()),
+            "result_bytes_by_kind": per_kind_raw,
+            "by_kind": per_kind}
+
+
+def model_flops(cfg, shape: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    seq, batch, kind = steps_mod.SHAPES[shape]
+    n = cfg.param_count(active_only=cfg.num_experts > 0)
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def roofline_terms(cell: dict, chips: int) -> dict:
+    """Three-term roofline from the loop-aware HLO analysis (hlo_cost).
+
+    All quantities are PER-DEVICE (post-SPMD program), so each term is
+    per-device work / per-chip bandwidth -- identical to the brief's
+    total-work / (chips x bw) formulation."""
+    flops_dev = cell["hlo_cost"]["flops"]
+    bytes_dev = cell["hlo_cost"]["bytes_hbm"]
+    coll_dev = cell["hlo_cost"]["coll_link_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = cell["model_flops"]
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops": mf, "useful_flops_ratio": useful,
+            "roofline_bound_s": max(t_compute, t_memory, t_coll)}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, donate: bool = True,
+             smoke: bool = False) -> dict:
+    if smoke:
+        from ..configs import get_smoke
+        import jax as _jax
+        cfg0 = get_smoke(arch)
+        steps_mod.SHAPES = {k: (64, 8, v[2]) for k, v in steps_mod.SHAPES.items()}
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        shp = (2, 2, 2) if multi_pod else (2, 2)
+        mesh = _jax.make_mesh(shp, axes,
+                              axis_types=(_jax.sharding.AxisType.Auto,) * len(axes))
+    else:
+        cfg0 = get_config(arch)
+        mesh = None
+    ok, why = steps_mod.shape_applicable(cfg0, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    seq, batch, kind = steps_mod.SHAPES[shape]
+    cfg = steps_mod.decode_config(cfg0, shape)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            tcfg = steps_mod.train_config_for(arch)
+            _, train_step = make_train_step(cfg, tcfg)
+            state_sd = steps_mod.state_specs(cfg, tcfg)
+            state_sh = steps_mod.state_shardings(cfg, tcfg, mesh)
+            batch_sd = steps_mod.input_specs(cfg, shape)
+            batch_sh = steps_mod.batch_shardings(batch_sd, mesh)
+            fn = jax.jit(train_step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_sd, batch_sd)
+        else:
+            prefill_step, serve_step = steps_mod.make_steps(cfg)
+            params_sd = steps_mod.param_specs(cfg)
+            params_sh = steps_mod.serve_param_shardings(cfg, mesh)
+            batch_sd = steps_mod.input_specs(cfg, shape)
+            batch_sh = steps_mod.batch_shardings(batch_sd, mesh)
+            step = prefill_step if kind == "prefill" else serve_step
+            # Pin the output cache layout (seq-sharded; see dist/sharding):
+            # without it XLA may replicate caches whose head count does not
+            # divide the model axis (+38 GiB/device on qwen1.5 prefill).
+            cache_out_sh = steps_mod.cache_out_shardings(cfg, shape, mesh)
+            fn = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                         out_shardings=(None, cache_out_sh),
+                         donate_argnums=(1,) if (donate and kind == "decode") else ())
+            lowered = fn.lower(params_sd, batch_sd)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)                 # text-level (loop-unaware)
+    hc = hlo_cost.analyze(hlo)                   # loop-aware (authoritative)
+    cell = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips, "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        # raw backend numbers kept for reference; the CPU backend counts
+        # while bodies once, hence hlo_cost below is authoritative.
+        "cost": {k: v for k, v in cost.items()
+                 if k in ("flops", "bytes accessed", "transcendentals")},
+        "collectives": coll,
+        "hlo_cost": hc,
+        "model_flops": model_flops(cfg0, shape),
+    }
+    cell["roofline"] = roofline_terms(cell, chips)
+    if os.environ.get("DRYRUN_SAVE_HLO"):
+        import gzip
+        with gzip.open(os.environ["DRYRUN_SAVE_HLO"] +
+                       f"/{arch}__{shape}__{cell['mesh']}.hlo.gz", "wt") as f:
+            f.write(hlo)
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(steps_mod.SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs on a tiny mesh (CI validation of "
+                         "the full launch path)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in steps_mod.SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip-cached] {tag}")
+                continue
+            try:
+                cell = run_cell(arch, shape, multi, donate=not args.no_donate,
+                                smoke=args.smoke)
+            except Exception as e:  # a failing cell is a bug -- record it loudly
+                cell = {"arch": arch, "shape": shape,
+                        "mesh": "multi" if multi else "single",
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(cell, f, indent=1)
+            status = cell["status"]
+            extra = ""
+            if status == "ok":
+                r = cell["roofline"]
+                extra = (f" compile={cell['compile_s']}s "
+                         f"dom={r['dominant']} "
+                         f"t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+                         f"{r['t_collective_s']:.2e})s "
+                         f"temp={cell['memory']['temp_bytes']/2**30:.2f}GiB")
+            elif status == "error":
+                extra = " " + cell["error"][:160]
+            print(f"[{status}] {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Step builders shared by the launchers and the dry-run: train_step /
+prefill_step / serve_step with their input ShapeDtypeStructs and
+shardings for a given (arch config x input shape x mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..dist import sharding as shd
+from ..models import get_model
+from ..models.common import dtype_of
+from ..optim import adamw
+from ..train.train_loop import TrainConfig, make_train_step
+
+
+# The assigned input-shape grid (brief): name -> (seq_len, global_batch, kind).
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# Sub-quadratic families run long_500k; pure full-attention archs skip it.
+LONG_OK_FAMILIES = ("xlstm", "hybrid")
+
+# Gradient-accumulation per arch for train_4k: keeps per-device activation
+# memory inside HBM (microbatch must stay divisible by pod*data = 32).
+TRAIN_ACCUM = {
+    "qwen2-72b": 8, "qwen1.5-32b": 8, "nemotron-4-15b": 8,
+    "phi3.5-moe-42b-a6.6b": 8, "granite-moe-3b-a800m": 2,
+    "recurrentgemma-2b": 2, "qwen2-vl-2b": 2,
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return False, ("full-attention arch: 500k dense KV decode fails the "
+                       "sub-quadratic gate (DESIGN.md §Shape applicability)")
+    return True, ""
+
+
+def _token_specs(cfg: ModelConfig, seq: int, batch: int, *, targets: bool):
+    d = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if targets:
+        d["targets"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    ct = dtype_of(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        d["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), ct)
+    elif cfg.family == "encdec":
+        # Audio-frontend stub: ~4x downsampled frame embeddings.
+        t_src = max(seq // 4, 16)
+        d["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, t_src, cfg.d_model), ct)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell --
+    weak-type-correct, shardable, no device allocation."""
+    seq, batch, kind = SHAPES[shape]
+    if kind == "train":
+        return _token_specs(cfg, seq, batch, targets=True)
+    if kind == "prefill":
+        return _token_specs(cfg, seq, batch, targets=False)
+    # decode: one new token against a seq-long cache
+    api = get_model(cfg)
+    dec_cfg = decode_config(cfg, shape)
+    if cfg.family == "encdec":
+        caches = api.init_caches(dec_cfg, batch, seq, t_src=max(seq // 4, 16))
+    else:
+        caches = api.init_caches(dec_cfg, batch, seq)
+    d = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+         "caches": caches}
+    return d
+
+
+def decode_config(cfg: ModelConfig, shape: str) -> ModelConfig:
+    seq, _, kind = SHAPES[shape]
+    if kind == "decode" or kind == "prefill":
+        # VLM prefill writes vision-prefix + text positions into the cache.
+        extra = cfg.num_patches if cfg.family == "vlm" else 0
+        return dataclasses.replace(cfg, max_target_len=seq + extra)
+    return cfg
+
+
+# ----------------------------- step functions --------------------------------
+
+
+def make_steps(cfg: ModelConfig):
+    api = get_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, caches = api.apply(params, cfg, batch["tokens"], mode="prefill",
+                                   prefix_embeds=batch.get("prefix_embeds"))
+        return logits[:, -1], caches   # serving needs last-position logits only
+
+    def serve_step(params, batch):
+        logits, caches = api.apply(params, cfg, batch["tokens"], mode="decode",
+                                   caches=batch["caches"])
+        return logits[:, -1], caches
+
+    return prefill_step, serve_step
+
+
+def param_specs(cfg: ModelConfig):
+    api = get_model(cfg)
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
+
+
+def state_specs(cfg: ModelConfig, tcfg: TrainConfig):
+    init_state, _ = make_train_step(cfg, tcfg)
+    return jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0)))
+
+
+def state_shardings(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    """NamedShardings for the train state: params/m/v by the train rules,
+    step replicated."""
+    api = get_model(cfg)
+    axes = api.axes(cfg)
+    pshapes = param_specs(cfg)
+    pspec = shd.param_pspecs(axes, pshapes, mesh, mode="train")
+    state_spec = {
+        "params": pspec,
+        "opt": {"m": pspec, "v": pspec, "step": P()},
+    }
+    if tcfg.compress_grads:
+        state_spec["ef"] = pspec
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), state_spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_param_shardings(cfg: ModelConfig, mesh: Mesh):
+    api = get_model(cfg)
+    pspec = shd.param_pspecs(api.axes(cfg), param_specs(cfg), mesh, mode="serve")
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch_specs, mesh: Mesh):
+    def leaf(sd):
+        if not hasattr(sd, "shape"):
+            return NamedSharding(mesh, P())
+        return None
+    # tokens/targets/prefix: dim-0 batch sharding; caches: cache rules.
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "caches":
+            out[k] = jax.tree.map(lambda s: NamedSharding(
+                mesh, _one(shd.cache_pspecs(s, mesh))), v)
+        else:
+            out[k] = jax.tree.map(lambda s: NamedSharding(
+                mesh, _one(shd.data_pspecs(s, mesh))), v)
+    return out
+
+
+def _one(x):
+    # data_pspecs/cache_pspecs map over trees; leaves here are single specs
+    return x if isinstance(x, P) else jax.tree.leaves(
+        x, is_leaf=lambda y: isinstance(y, P))[0]
+
+
+def cache_out_shardings(cfg: ModelConfig, shape: str, mesh: Mesh):
+    """NamedShardings for the cache RETURNED by prefill/serve steps."""
+    seq, batch, kind = SHAPES[shape]
+    api = get_model(cfg)
+    dec_cfg = decode_config(cfg, shape)
+    if cfg.family == "encdec":
+        spec_tree = api.init_caches(dec_cfg, batch, dec_cfg.max_target_len,
+                                    t_src=max(seq // 4, 16))
+    else:
+        spec_tree = api.init_caches(dec_cfg, batch, dec_cfg.max_target_len)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _one(shd.cache_pspecs(s, mesh))),
+        spec_tree)
+
+
+def train_config_for(arch_name: str) -> TrainConfig:
+    return TrainConfig(opt=adamw.OptConfig(),
+                       accum_steps=TRAIN_ACCUM.get(arch_name, 1))

@@ -1,0 +1,5 @@
+"""Model zoo: pure-functional JAX implementations of the assigned
+architecture families (dense/MoE/VLM transformer, xLSTM, RG-LRU hybrid,
+encoder-decoder)."""
+
+from .registry import ModelAPI, get_model

@@ -1,0 +1,419 @@
+"""Attention: GQA with chunked online-softmax (flash-style in pure JAX),
+sliding-window (local) variant, cross-attention, and KV-cache decode.
+
+Memory design: prefill at 32k tokens can NEVER materialize the full
+[b, h, s, s] score tensor.  ``chunked_attention`` double-chunks (lax.map
+over query blocks, lax.scan over KV blocks) carrying the online-softmax
+running (max, denom, acc) so peak memory is O(q_chunk * kv_chunk).
+
+The pure-JAX version processes all KV blocks under a mask (the causal
+block-skip lives in the Pallas flash kernel -- see kernels/flash and
+EXPERIMENTS.md §Perf for the measured HLO-flops delta).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, wsc
+
+NEG_INF = -1e30
+
+
+def _mask_block(
+    qpos: jax.Array, kpos: jax.Array, *, causal: bool, window: int, kv_len: jax.Array | None
+) -> jax.Array:
+    """(qc, kc) boolean visibility mask from absolute positions."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def _flash_fwd_blocks(qp, kp, vp, *, causal, window, q_offset, kv_valid,
+                      q_chunk, kv_chunk, scale, bf16_operands=False,
+                      bf16_p=False):
+    """qp: (nq, b, hkv, g, qc, hd); kp/vp: (nk, b, hkv, kc, hd).
+    Returns (out (nq, b, hkv, g, qc, hd), lse (nq, b, hkv, g, qc))."""
+    nq = qp.shape[0]
+    b, hkv, g, qc, hd = qp.shape[1:]
+
+    def q_block(args):
+        qi, qblk = args
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv):
+            m_run, l_run, acc = carry
+            kj, kblk, vblk = kv
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            if bf16_operands:
+                # keep bf16 into the MXU; fp32 accumulate (halves HBM reads
+                # of score-dot operands -- §Perf knob)
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                               preferred_element_type=jnp.float32) * scale
+            else:
+                s = jnp.einsum(
+                    "bhgqd,bhkd->bhgqk", qblk.astype(jnp.float32),
+                    kblk.astype(jnp.float32)) * scale
+            mask = _mask_block(qpos, kpos, causal=causal, window=window,
+                               kv_len=kv_valid)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(axis=-1)
+            if bf16_p:
+                pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(jnp.bfloat16),
+                                vblk.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                vblk.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, hd), jnp.float32)
+        nk = kp.shape[0]
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kp, vp))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))
+        return out, lse
+
+    return jax.lax.map(q_block, (jnp.arange(nq), qp))
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _flash_attention(qp, kp, vp, causal, window, q_offset, kv_valid,
+                     q_chunk, kv_chunk, bf16_operands=False, bf16_p=False):
+    """Blocked flash attention with a flash BACKWARD (custom VJP).
+
+    Without this, the scan/map backward materializes every fp32 score
+    block -- the full [sq, skv] attention matrix (measured: 16 GiB/device
+    at 4k seq on smollm train) -- exactly what flash attention exists to
+    avoid.  The backward below recomputes score blocks from (q, k, v, lse)
+    and accumulates dq/dk/dv blockwise."""
+    scale = qp.shape[-1] ** -0.5
+    out, _ = _flash_fwd_blocks(qp, kp, vp, causal=causal, window=window,
+                               q_offset=q_offset, kv_valid=kv_valid,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk, scale=scale,
+                               bf16_operands=bf16_operands, bf16_p=bf16_p)
+    return out
+
+
+def _flash_fwd_rule(qp, kp, vp, causal, window, q_offset, kv_valid,
+                    q_chunk, kv_chunk, bf16_operands=False, bf16_p=False):
+    scale = qp.shape[-1] ** -0.5
+    out, lse = _flash_fwd_blocks(qp, kp, vp, causal=causal, window=window,
+                                 q_offset=q_offset, kv_valid=kv_valid,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                 scale=scale, bf16_operands=bf16_operands,
+                                 bf16_p=bf16_p)
+    return out, (qp, kp, vp, out, lse)
+
+
+def _flash_bwd_rule(causal, window, q_offset, kv_valid, q_chunk, kv_chunk,
+                    bf16_operands, bf16_p, res, dout):
+    qp, kp, vp, out, lse = res
+    scale = qp.shape[-1] ** -0.5
+    nq = qp.shape[0]
+    nk = kp.shape[0]
+    # delta_i = rowsum(dout * out) -- the softmax-backward correction term.
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    def q_step(kv_grads, xs):
+        dk_acc, dv_acc = kv_grads
+        qi, qblk, oblk_d, lse_i, delta_i = xs
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        qf = qblk.astype(jnp.float32)
+
+        def kv_step(carry, kv):
+            dq_i, dk_acc, dv_acc = carry
+            kj, kblk, vblk = kv
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            kf, vf = kblk.astype(jnp.float32), vblk.astype(jnp.float32)
+            if bf16_operands:
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                               preferred_element_type=jnp.float32) * scale
+            else:
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+            mask = _mask_block(qpos, kpos, causal=causal, window=window,
+                               kv_len=kv_valid)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])                      # recomputed
+            do = oblk_d.astype(jnp.float32)
+            dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, do)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do, vf)
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kf)
+            dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)
+            dk_acc = dk_acc.at[kj].add(dk)
+            dv_acc = dv_acc.at[kj].add(dv)
+            return (dq_i, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros(qblk.shape, jnp.float32)
+        (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), (jnp.arange(nk), kp, vp))
+        return (dk_acc, dv_acc), dq_i
+
+    dk0 = jnp.zeros((nk, *kp.shape[1:]), jnp.float32)
+    dv0 = jnp.zeros((nk, *vp.shape[1:]), jnp.float32)
+    (dk, dv), dq = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.arange(nq), qp, dout, lse, delta))
+    return dq.astype(qp.dtype), dk.astype(kp.dtype), dv.astype(vp.dtype)
+
+
+_flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    bf16_operands: bool = False,
+    bf16_p: bool = False,
+) -> jax.Array:
+    """q: (b, hq, sq, d); k/v: (b, hkv, skv, d); GQA via hq = g * hkv.
+
+    Returns (b, hq, sq, d).  Flash forward + flash backward (custom VJP);
+    fp32 accumulation, bf16-safe inputs."""
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nk = -(-skv // kv_chunk)
+    # Pad seq dims to multiples of the chunk (mask handles the tail).
+    sq_p, skv_p = nq * q_chunk, nk * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    kv_valid = jnp.asarray(skv if kv_len is None else kv_len, jnp.int32)
+
+    qp = qp.reshape(b, hkv, g, nq, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    kp = kp.reshape(b, hkv, nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vp = vp.reshape(b, hkv, nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    if kv_len is None:
+        # Static valid-length: the custom-VJP flash path (train/prefill).
+        outs = _flash_attention(qp, kp, vp, causal, window, q_offset,
+                                int(skv), q_chunk, kv_chunk,
+                                bf16_operands, bf16_p)
+    else:
+        # Dynamic cache length (no gradient flows here): plain blocked fwd.
+        outs, _ = _flash_fwd_blocks(
+            qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
+            kv_valid=kv_valid, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            scale=hd ** -0.5)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq_p, hd)[:, :, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-position attention against the cache.
+
+    q: (b, hq, 1, d); caches: (b, hkv, S, d); cache_len: () current length
+    (the new token's position is cache_len - 1 after insertion)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, S, _ = k_cache.shape
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_cache.astype(jnp.float32)) * (hd ** -0.5)
+    kpos = jnp.arange(S)
+    qpos = cache_len - 1
+    mask = kpos[None, :] <= qpos  # causal vs cache
+    if window > 0:
+        mask &= qpos - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+# --------------------------- attention block --------------------------------
+
+
+def attn_init(key, cfg, *, cross: bool = False) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(k1, d, qd),
+        "wk": dense_init(k2, d, kvd),
+        "wv": dense_init(k3, d, kvd),
+        "wo": dense_init(k4, qd, d),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    return p
+
+
+def attn_axes(cfg, *, cross: bool = False) -> dict:
+    """Logical axes per leaf (see dist/sharding.py for the mesh mapping)."""
+    p = {
+        "wq": ("embed", "q_heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("q_heads", "embed"),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = ("q_heads",)
+        p["bk"] = ("kv_heads",)
+        p["bv"] = ("kv_heads",)
+    return p
+
+
+def _project_qkv(params, cfg, x, kv_x):
+    b, t, _ = x.shape
+    ct = x.dtype
+    q = x @ params["wq"].astype(ct)
+    k = kv_x @ params["wk"].astype(ct)
+    v = kv_x @ params["wv"].astype(ct)
+    if "bq" in params:
+        q = q + params["bq"].astype(ct)
+        k = k + params["bk"].astype(ct)
+        v = v + params["bv"].astype(ct)
+    q = q.reshape(b, t, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, kv_x.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, kv_x.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attn_apply(
+    params: dict,
+    cfg,
+    x: jax.Array,
+    *,
+    rope: tuple[jax.Array, jax.Array] | None,
+    causal: bool = True,
+    window: int = 0,
+    kv_x: jax.Array | None = None,
+    cache: dict | None = None,
+    mode: str = "train",
+) -> tuple[jax.Array, dict | None]:
+    """One attention block.  mode: 'train' | 'prefill' | 'decode'.
+
+    'prefill' fills and returns a cache of capacity cfg.max_target_len;
+    'decode' consumes x of seq-len 1 plus the cache and appends to it.
+    Cross-attention (kv_x = encoder output) caches K/V once at prefill."""
+    b, t, _ = x.shape
+    cross = kv_x is not None
+    q, k, v = _project_qkv(params, cfg, x, kv_x if cross else x)
+
+    if rope is not None and not cross:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    q = q.transpose(0, 2, 1, 3)  # (b, h, t, d)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    pad_h = 0
+    if (getattr(cfg, "attn_pad_heads", False)
+            and cfg.num_heads == cfg.num_kv_heads
+            and mode in ("train", "prefill")):
+        from .common import mesh_axis_names
+        m = jax.sharding.get_abstract_mesh()
+        if not m.empty and "model" in m.axis_names:
+            ms = dict(zip(m.axis_names, m.axis_sizes))["model"]
+            target = -(-cfg.num_heads // ms) * ms
+            pad_h = target - cfg.num_heads
+            if pad_h:
+                padded = ((0, 0), (0, pad_h), (0, 0), (0, 0))
+                q, k, v = (jnp.pad(a, padded) for a in (q, k, v))
+    if getattr(cfg, "attn_batch_shard", False):
+        # §Perf knob: reshard batch over (pod, data, model) for the
+        # attention compute -- archs whose heads do not divide the model
+        # axis (smollm: 15 heads) otherwise run attention fully replicated
+        # across it.  Cheap all-to-all of q/k/v/out vs model-axis-x compute.
+        full = (("pod", "data", "model"),)
+        q = wsc(q, full[0], None, None, None)
+        k = wsc(k, full[0], None, None, None)
+        v = wsc(v, full[0], None, None, None)
+    else:
+        q = wsc(q, ("pod", "data"), "model", None, None)
+        k = wsc(k, ("pod", "data"), "model", None, None)
+        v = wsc(v, ("pod", "data"), "model", None, None)
+    attn_kw = dict(
+        q_chunk=getattr(cfg, "flash_q_chunk", 512),
+        kv_chunk=getattr(cfg, "flash_kv_chunk", 1024),
+        bf16_operands=getattr(cfg, "flash_bf16_operands", False),
+        bf16_p=getattr(cfg, "flash_bf16_p", False))
+
+    new_cache = None
+    if mode == "train":
+        out = chunked_attention(q, k, v, causal=causal and not cross,
+                                window=window, **attn_kw)
+    elif mode == "prefill":
+        out = chunked_attention(q, k, v, causal=causal and not cross,
+                                window=window, **attn_kw)
+        k_store = k[:, : cfg.num_kv_heads]  # unpadded heads into the cache
+        v_store = v[:, : cfg.num_kv_heads]
+        S = k_store.shape[2] if cross else cfg.max_target_len
+        kc = jnp.zeros((b, cfg.num_kv_heads, S, cfg.head_dim), k.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k_store, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v_store, (0, 0, 0, 0))
+        # Cache length: decoder tokens written (self) / encoder length (cross).
+        new_cache = {"k": kc, "v": vc,
+                     "len": jnp.asarray(k.shape[2] if cross else t, jnp.int32)}
+    elif mode == "decode":
+        assert cache is not None
+        if cross:
+            # K/V fixed from prefill; just attend.
+            out = decode_attention(q, cache["k"], cache["v"], cache["len"],
+                                   window=0)
+            new_cache = cache
+        else:
+            pos = cache["len"]
+            kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, pos, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, pos, 0))
+            new_len = pos + t
+            out = decode_attention(q, kc, vc, new_len, window=window)
+            new_cache = {"k": kc, "v": vc, "len": new_len}
+    else:
+        raise ValueError(mode)
+
+    if pad_h:
+        out = out[:, : cfg.num_heads]
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+    out = out @ params["wo"].astype(out.dtype)
+    return wsc(out, ("pod", "data"), None, None), new_cache
+
+
+def attn_cache_spec(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct cache skeleton for one layer (self-attention)."""
+    shp = (batch, cfg.num_kv_heads, s_max, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, dtype),
+        "v": jax.ShapeDtypeStruct(shp, dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }

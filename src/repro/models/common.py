@@ -1,0 +1,160 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, activations, init,
+and the mesh-aware sharding-constraint helper used throughout the zoo.
+
+All models are pure-functional: params are plain nested-dict pytrees,
+``init_*`` builds them, ``apply``-style functions consume them.  Leaf
+arrays are annotated with *logical axes* via the parallel ``*_axes``
+functions in each model module; ``repro.dist.sharding`` maps logical ->
+mesh axes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ----------------------------- sharding helper -----------------------------
+
+
+def mesh_axis_names() -> tuple[str, ...]:
+    m = jax.sharding.get_abstract_mesh()
+    return () if m.empty else m.axis_names
+
+
+def wsc(x: jax.Array, *logical: object) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op without a mesh.
+
+    ``logical`` entries are mesh-axis names, tuples of names, or None.
+    Names absent from the current mesh are dropped (e.g. 'pod' on the
+    single-pod mesh) and axes that do not divide the dimension are dropped
+    (small archs on big meshes stay replicated rather than failing), so one
+    annotation works for every mesh."""
+    m = jax.sharding.get_abstract_mesh()
+    if m.empty:
+        return x
+    names = m.axis_names
+    sizes = dict(zip(names, m.axis_sizes))
+    spec = []
+    for dim, entry in zip(x.shape, logical):
+        cand = (entry,) if isinstance(entry, str) else (entry or ())
+        kept: list[str] = []
+        total = 1
+        for a in cand:
+            if a in names and dim % (total * sizes[a]) == 0:
+                kept.append(a)
+                total *= sizes[a]
+        spec.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+BATCH = ("pod", "data")  # logical batch axis spans pod x data
+
+
+# ------------------------------- numerics ----------------------------------
+
+
+def dtype_of(name: str) -> jnp.dtype:
+    return jnp.dtype({"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                      "float16": jnp.float16}[name])
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, params, cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rmsnorm(x, params["scale"], cfg.norm_eps)
+
+
+def norm_init(cfg, d: int) -> dict:
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # rmsnorm stores (scale - 1)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ------------------------------ initializers -------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-style), the zoo default."""
+    scale = d_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)
+
+
+# --------------------------------- RoPE -------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: (..., t) int -> cos/sin of shape (..., t, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (b, t, h, d). cos/sin: (b, t, d/2) or (t, d/2). Rotate-half form."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos_, sin_ = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos_, sin_ = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_angles(
+    positions: jax.Array, sections: tuple[int, int, int], head_dim: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: positions (3, b, t) for (temporal, height, width);
+    the head_dim/2 frequency slots are split into three contiguous sections,
+    each rotated by its own position stream."""
+    half = head_dim // 2
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to head_dim/2={half}")
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (3, b, t, half)
+    idx = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )  # (half,) section selector
+    ang = jnp.take_along_axis(
+        ang, idx[None, None, None, :].repeat(ang.shape[1], 1).repeat(ang.shape[2], 2), axis=0
+    )[0]  # (b, t, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def default_positions(b: int, t: int, offset: jax.Array | int = 0) -> jax.Array:
+    return jnp.arange(t, dtype=jnp.int32)[None, :] + jnp.zeros((b, 1), jnp.int32) + offset

@@ -1,0 +1,243 @@
+"""Decoder-only transformer trunk (dense + MoE + VLM families).
+
+Pure-functional, scan-over-layers with stacked params (HLO depth O(1)),
+logical-axis annotations via ``*_axes`` mirrors of the param trees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_mod
+from .attention import attn_apply, attn_axes, attn_cache_spec, attn_init
+from .common import (
+    BATCH,
+    act_fn,
+    default_positions,
+    dense_init,
+    dtype_of,
+    embed_init,
+    norm,
+    norm_init,
+    rope_angles,
+    softcap,
+    wsc,
+)
+
+# ------------------------------- MLP ----------------------------------------
+
+
+def mlp_init(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {"wi": dense_init(k1, d, f), "wg": dense_init(k2, d, f),
+                "wo": dense_init(k3, f, d)}
+    return {"wi": dense_init(k1, d, f), "wo": dense_init(k3, f, d)}
+
+
+def mlp_axes(cfg) -> dict:
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+
+
+def mlp_apply(params, cfg, x):
+    ct = x.dtype
+    h = x @ params["wi"].astype(ct)
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(h) * (x @ params["wg"].astype(ct))
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(h) * (x @ params["wg"].astype(ct))
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = act_fn(cfg.mlp_type)(h)
+    # pin the gated hidden to the model axis: without this XLA may
+    # all-gather the fp32-converted d_ff activation (430 GB/device on
+    # qwen1.5 prefill -- §Perf H7); "model" is the MESH axis name
+    h = wsc(h, BATCH, None, "model")
+    return wsc(h @ params["wo"].astype(ct), BATCH, None, None)
+
+
+# ------------------------------ block ---------------------------------------
+
+
+def block_init(key, cfg) -> dict:
+    ka, km, kn = jax.random.split(key, 3)
+    p = {
+        "ln1": norm_init(cfg, cfg.d_model),
+        "attn": attn_init(ka, cfg),
+        "ln2": norm_init(cfg, cfg.d_model),
+    }
+    if cfg.num_experts > 0:
+        p["moe"] = moe_mod.moe_init(km, cfg)
+    else:
+        p["mlp"] = mlp_init(km, cfg)
+    del kn
+    return p
+
+
+def block_axes(cfg) -> dict:
+    na = {"scale": (None,)} if cfg.norm_type != "layernorm" else {
+        "scale": (None,), "bias": (None,)}
+    p = {"ln1": dict(na), "attn": attn_axes(cfg), "ln2": dict(na)}
+    if cfg.num_experts > 0:
+        p["moe"] = moe_mod.moe_axes(cfg)
+    else:
+        p["mlp"] = mlp_axes(cfg)
+    return p
+
+
+def block_apply(params, cfg, x, *, rope, mode, cache=None, window=0):
+    """Returns (x, new_cache, aux_loss) -- aux is the MoE router balance
+    loss (0 for dense blocks), accumulated across layers by the trunk."""
+    h, new_cache = attn_apply(
+        params["attn"], cfg, norm(x, params["ln1"], cfg),
+        rope=rope, causal=True, window=window, cache=cache, mode=mode)
+    x = x + h
+    y = norm(x, params["ln2"], cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_experts > 0:
+        store: list = []
+        y = moe_mod.moe_apply(params["moe"], cfg, y, aux_loss_store=store)
+        aux = store[0]
+    else:
+        y = mlp_apply(params["mlp"], cfg, y)
+    return x + y, new_cache, aux
+
+
+# ------------------------------ full LM -------------------------------------
+
+
+def init_lm(key, cfg) -> dict:
+    ke, kb, ko = jax.random.split(key, 3)
+    keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg))(keys)
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "ln_f": norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ko, cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def lm_axes(cfg) -> dict:
+    na = {"scale": (None,)} if cfg.norm_type != "layernorm" else {
+        "scale": (None,), "bias": (None,)}
+    ba = jax.tree.map(lambda ax: ("layers",) + ax, block_axes(cfg),
+                      is_leaf=lambda x: isinstance(x, tuple))
+    p = {"embed": ("vocab", "embed"), "blocks": ba, "ln_f": dict(na)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("embed", "vocab")
+    return p
+
+
+def _rope_for(cfg, positions):
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _trunk(params, cfg, x, rope, mode, caches, window_for):
+    """Scan (or unroll) the block stack.  caches: stacked over layers.
+    Returns (x, new_caches, aux_loss_sum)."""
+    if getattr(cfg, "cast_params_pre_scan", False):
+        # §Perf knob: cast the (sharded) fp32 param stack to compute dtype
+        # BEFORE the scan, so FSDP all-gathers inside the loop move bf16 --
+        # the baseline gathers fp32 and converts after (2x link traffic).
+        ct = dtype_of(cfg.compute_dtype)
+        params = dict(params)
+        params["blocks"] = jax.tree.map(
+            lambda a: a.astype(ct) if a.dtype == jnp.float32 else a,
+            params["blocks"])
+    if cfg.scan_layers and not cfg.layer_pattern:
+        def body(carry, xs):
+            y, aux_sum = carry
+            blk, cache_l = xs
+            y, nc, aux = block_apply(blk, cfg, y, rope=rope, mode=mode,
+                                     cache=cache_l, window=window_for(0))
+            return (y, aux_sum + aux), nc
+        body = _maybe_remat(body, cfg)
+        (x, aux_sum), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], caches))
+        return x, new_caches, aux_sum
+    # Unrolled path (heterogeneous patterns handled by the family modules).
+    new_caches = []
+    aux_sum = jnp.zeros((), jnp.float32)
+    for i in range(cfg.num_layers):
+        blk = jax.tree.map(lambda a: a[i], params["blocks"])
+        cache_l = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+        fn = _maybe_remat(
+            lambda b, xx, cc: block_apply(b, cfg, xx, rope=rope, mode=mode,
+                                          cache=cc, window=window_for(i)), cfg)
+        x, nc, aux = fn(blk, x, cache_l)
+        aux_sum = aux_sum + aux
+        new_caches.append(nc)
+    if new_caches[0] is not None:
+        new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *new_caches)
+    else:
+        new_caches = None
+    return x, new_caches, aux_sum
+
+
+def apply_lm(
+    params: dict,
+    cfg,
+    tokens: jax.Array,
+    *,
+    mode: str = "train",
+    caches: dict | None = None,
+    positions: jax.Array | None = None,
+    prefix_embeds: jax.Array | None = None,
+    rope_override=None,
+) -> tuple[jax.Array, dict | None]:
+    """tokens: (b, t) int32.  prefix_embeds: (b, tp, d) modality stub
+    (VLM patches / audio frames) prepended to the token embeddings.
+    Returns (logits (b, t_total, vocab), new_caches)."""
+    ct = dtype_of(cfg.compute_dtype)
+    x = params["embed"].astype(ct)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(ct), x], axis=1)
+    b, t, _ = x.shape
+    x = wsc(x, BATCH, None, None)
+
+    if positions is None:
+        offset = caches["len"][0] if (mode == "decode" and caches is not None) else 0
+        positions = default_positions(b, t, offset)
+    rope = rope_override if rope_override is not None else _rope_for(cfg, positions)
+
+    window_for = lambda i: cfg.attention_window
+    x, new_caches, aux = _trunk(params, cfg, x, rope, mode, caches, window_for)
+
+    x = norm(x, params["ln_f"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(ct)
+    logits = softcap(logits, cfg.logit_softcap)
+    logits = wsc(logits, BATCH, None, "model")
+    if mode == "train":
+        return logits, {"aux_loss": aux}
+    return logits, new_caches
+
+
+def init_caches(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> dict:
+    """Stacked-over-layers KV cache ShapeDtypeStructs (fill with zeros for
+    real use; launch/dryrun uses the structs directly)."""
+    one = attn_cache_spec(cfg, batch, s_max, dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers, *s.shape), s.dtype), one)
+
+
+def zeros_caches(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_caches(cfg, batch, s_max, dtype))

@@ -1,0 +1,177 @@
+"""Encoder-decoder backbone (Seamless-M4T medium text/speech trunk).
+
+The audio frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings (b, t_src, d) from ``input_specs()``; the
+transformer trunk (what this framework exercises) is complete --
+bidirectional encoder, causal decoder with cross-attention, KV caches for
+both at serve time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_apply, attn_axes, attn_cache_spec, attn_init
+from .common import (
+    BATCH, default_positions, dense_init, dtype_of, embed_init, norm,
+    norm_init, rope_angles, wsc,
+)
+from .dense import mlp_apply, mlp_axes, mlp_init, _maybe_remat
+
+
+# ------------------------------ encoder -------------------------------------
+
+
+def enc_block_init(key, cfg):
+    ka, km = jax.random.split(key)
+    return {"ln1": norm_init(cfg, cfg.d_model), "attn": attn_init(ka, cfg),
+            "ln2": norm_init(cfg, cfg.d_model), "mlp": mlp_init(km, cfg)}
+
+
+def _norm_axes(cfg):
+    return ({"scale": (None,), "bias": (None,)} if cfg.norm_type == "layernorm"
+            else {"scale": (None,)})
+
+
+def enc_block_axes(cfg):
+    na = _norm_axes(cfg)
+    return {"ln1": dict(na), "attn": attn_axes(cfg), "ln2": dict(na),
+            "mlp": mlp_axes(cfg)}
+
+
+def encode(params, cfg, frames):
+    """frames: (b, t_src, d_model) stub embeddings -> encoder output."""
+    ct = dtype_of(cfg.compute_dtype)
+    x = wsc(frames.astype(ct), BATCH, None, None)
+    b, t, _ = x.shape
+    rope = rope_angles(default_positions(b, t), cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, blk):
+        y = carry
+        h, _ = attn_apply(blk["attn"], cfg, norm(y, blk["ln1"], cfg),
+                          rope=rope, causal=False, mode="train")
+        y = y + h
+        y = y + mlp_apply(blk["mlp"], cfg, norm(y, blk["ln2"], cfg))
+        return y, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_blocks"])
+    return norm(x, params["enc_ln"], cfg)
+
+
+# ------------------------------ decoder -------------------------------------
+
+
+def dec_block_init(key, cfg):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg, cfg.d_model), "self_attn": attn_init(ka, cfg),
+        "ln2": norm_init(cfg, cfg.d_model), "cross_attn": attn_init(kc, cfg, cross=True),
+        "ln3": norm_init(cfg, cfg.d_model), "mlp": mlp_init(km, cfg),
+    }
+
+
+def dec_block_axes(cfg):
+    na = _norm_axes(cfg)
+    return {"ln1": dict(na), "self_attn": attn_axes(cfg),
+            "ln2": dict(na), "cross_attn": attn_axes(cfg, cross=True),
+            "ln3": dict(na), "mlp": mlp_axes(cfg)}
+
+
+def dec_block_apply(params, cfg, x, enc_out, *, rope, mode, cache=None):
+    """cache: {"self": kv-cache, "cross": kv-cache} or None."""
+    c_self = None if cache is None else cache["self"]
+    c_cross = None if cache is None else cache["cross"]
+    h, nc_self = attn_apply(params["self_attn"], cfg, norm(x, params["ln1"], cfg),
+                            rope=rope, causal=True, mode=mode, cache=c_self)
+    x = x + h
+    h, nc_cross = attn_apply(params["cross_attn"], cfg, norm(x, params["ln2"], cfg),
+                             rope=None, kv_x=enc_out, mode=mode, cache=c_cross)
+    x = x + h
+    x = x + mlp_apply(params["mlp"], cfg, norm(x, params["ln3"], cfg))
+    nc = None
+    if nc_self is not None:
+        nc = {"self": nc_self, "cross": nc_cross}
+    return x, nc
+
+
+# ------------------------------ full model ----------------------------------
+
+
+def init_lm(key, cfg) -> dict:
+    ke, kb1, kb2, ko = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kb1, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(kb2, cfg.num_layers)
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "enc_blocks": jax.vmap(lambda k: enc_block_init(k, cfg))(enc_keys),
+        "enc_ln": norm_init(cfg, cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: dec_block_init(k, cfg))(dec_keys),
+        "ln_f": norm_init(cfg, cfg.d_model),
+        "lm_head": dense_init(ko, cfg.d_model, cfg.vocab_size),
+    }
+
+
+def lm_axes(cfg) -> dict:
+    na = _norm_axes(cfg)
+    lift = lambda tree: jax.tree.map(lambda ax: ("layers",) + ax, tree,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": ("vocab", "embed"),
+        "enc_blocks": lift(enc_block_axes(cfg)),
+        "enc_ln": dict(na),
+        "dec_blocks": lift(dec_block_axes(cfg)),
+        "ln_f": dict(na),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+def apply_lm(params, cfg, tokens, *, frames=None, enc_out=None, mode="train",
+             caches=None, positions=None, prefix_embeds=None, rope_override=None):
+    """Teacher-forced seq2seq (train) or cached decode.
+
+    train/prefill: ``frames`` (b, t_src, d) required; decode: pass
+    ``caches`` (the cross cache pins the encoder output)."""
+    del rope_override
+    if prefix_embeds is not None and frames is None:
+        frames = prefix_embeds  # launch-layer uniform calling convention
+    ct = dtype_of(cfg.compute_dtype)
+    if mode != "decode":
+        enc_out = encode(params, cfg, frames)
+
+    x = params["embed"].astype(ct)[tokens]
+    b, t, _ = x.shape
+    x = wsc(x, BATCH, None, None)
+    if positions is None:
+        offset = caches["self"]["len"][0] if mode == "decode" else 0
+        positions = default_positions(b, t, offset)
+    rope = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    if mode == "decode":
+        enc_out = jnp.zeros((b, 0, cfg.d_model), ct)  # unused; cross uses cache
+
+    def body(carry, xs):
+        blk, cache_l = xs
+        y, nc = dec_block_apply(blk, cfg, carry, enc_out, rope=rope,
+                                mode=mode, cache=cache_l)
+        return y, nc
+
+    x, new_caches = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                 (params["dec_blocks"], caches))
+    x = norm(x, params["ln_f"], cfg)
+    logits = x @ params["lm_head"].astype(ct)
+    return wsc(logits, BATCH, None, "model"), (new_caches if mode != "train" else None)
+
+
+def init_caches(cfg, batch: int, s_max: int, t_src: int | None = None,
+                dtype=jnp.bfloat16) -> dict:
+    t_src = t_src or s_max
+    one = {"self": attn_cache_spec(cfg, batch, s_max, dtype),
+           "cross": attn_cache_spec(cfg, batch, t_src, dtype)}
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers, *s.shape), s.dtype), one)
+
+
+def zeros_caches(cfg, batch: int, s_max: int, t_src: int | None = None) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_caches(cfg, batch, s_max, t_src))

@@ -1,0 +1,49 @@
+"""Model registry: uniform functional API per architecture family.
+
+    api = get_model(cfg)
+    params = api.init(key, cfg)
+    logits, _ = api.apply(params, cfg, tokens, mode="train")
+    caches = api.init_caches(cfg, batch, s_max)     # specs (ShapeDtypeStruct)
+    logits, caches = api.apply(..., mode="decode", caches=zeros)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import dense, encdec, rglru, vlm, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    apply: Callable
+    axes: Callable            # cfg -> pytree of logical-axis tuples
+    init_caches: Callable     # cfg, batch, s_max -> cache ShapeDtypeStructs
+    zeros_caches: Callable
+    has_decode: bool = True
+
+
+_FAMILIES = {
+    "dense": ModelAPI(dense.init_lm, dense.apply_lm, dense.lm_axes,
+                      dense.init_caches, dense.zeros_caches),
+    "moe": ModelAPI(dense.init_lm, dense.apply_lm, dense.lm_axes,
+                    dense.init_caches, dense.zeros_caches),
+    "vlm": ModelAPI(dense.init_lm, vlm.apply_lm, dense.lm_axes,
+                    dense.init_caches, dense.zeros_caches),
+    "xlstm": ModelAPI(xlstm.init_lm, xlstm.apply_lm, xlstm.lm_axes,
+                      xlstm.init_caches, xlstm.zeros_caches),
+    "hybrid": ModelAPI(rglru.init_lm, rglru.apply_lm, rglru.lm_axes,
+                       rglru.init_caches, rglru.zeros_caches),
+    "encdec": ModelAPI(encdec.init_lm, encdec.apply_lm, encdec.lm_axes,
+                       encdec.init_caches, encdec.zeros_caches),
+}
+
+
+def get_model(cfg) -> ModelAPI:
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r}; "
+                         f"known: {sorted(_FAMILIES)}") from None

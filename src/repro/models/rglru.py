@@ -1,0 +1,351 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent
+blocks + local (sliding-window) attention in a 1:2 attention:recurrent
+pattern, GeGLU MLPs.
+
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a)        (recurrence gate)
+         i_t = sigmoid(W_x x_t + b_x)        (input gate)
+         a_t = exp(-c * softplus(Lambda) * r_t),   c = 8
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence runs as a jax.lax.associative_scan
+(log-depth, TPU-friendly); decode carries h as O(1) state.  The causal
+depthwise conv ahead of the LRU uses the reproduced paper's kn2row-1D
+decomposition.  Attention layers keep a ROTATING window KV cache
+(capacity = window), so long_500k decode memory is O(window), not O(t).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.kn2row import conv1d_depthwise_causal
+from .common import (
+    BATCH, default_positions, dense_init, dtype_of, embed_init, norm,
+    norm_init, rope_angles, softcap, wsc,
+)
+from .attention import attn_apply, attn_axes, attn_init, NEG_INF
+from .common import apply_rope
+from .dense import mlp_apply, mlp_axes, mlp_init
+
+_C_RGLRU = 8.0
+
+
+# ------------------------------- RG-LRU core --------------------------------
+
+
+def rglru_scan(x_gated: jax.Array, log_a: jax.Array, h0: jax.Array | None):
+    """h_t = a_t h_{t-1} + b_t with b = sqrt(1-a^2) * x_gated.
+
+    x_gated/log_a: (b, t, w) fp32.  h0: (b, w) or None.  Associative scan."""
+    a = jnp.exp(log_a)
+    b_term = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * x_gated
+    if h0 is not None:
+        # Fold the carried state into the first step: b_0 += a_0 * h0.
+        b_term = b_term.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    return h  # (b, t, w); final state h[:, -1]
+
+
+def rglru_init(key, cfg) -> dict:
+    w = cfg.lru_width
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Lambda init so a = exp(-c*softplus(L)) lands in [0.9, 0.999] at r=1.
+    u = jax.random.uniform(k3, (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C_RGLRU))
+    return {
+        "w_a": dense_init(k1, w, w), "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": dense_init(k2, w, w), "b_x": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def rglru_apply(params, x, h0, *, bf16_gates: bool = False,
+                replicate_weights: bool = False):
+    """x: (b, t, w) any dtype -> (out, h_final) in fp32 recurrence.
+
+    bf16_gates: gate MATMULS in bf16 (recurrence itself stays fp32) --
+    halves the gate all-reduce payload when the channel dim is sharded
+    (§Perf, recurrentgemma train)."""
+    xf = x.astype(jnp.float32)
+    w_a, w_x = params["w_a"], params["w_x"]
+    if replicate_weights:
+        # batch-sharded LRU branch: gate weights are small (w^2 ~ 26 MB);
+        # replicating them makes the gate matmuls fully local instead of
+        # partial-sum all-reduces over the sharded contraction dim
+        w_a = wsc(w_a, None, None)
+        w_x = wsc(w_x, None, None)
+    if bf16_gates:
+        xb = x.astype(jnp.bfloat16)
+        r_pre = (xb @ w_a.astype(jnp.bfloat16)).astype(jnp.float32)
+        i_pre = (xb @ w_x.astype(jnp.bfloat16)).astype(jnp.float32)
+    else:
+        r_pre = xf @ w_a
+        i_pre = xf @ w_x
+    r = jax.nn.sigmoid(r_pre + params["b_a"])
+    i = jax.nn.sigmoid(i_pre + params["b_x"])
+    log_a = -_C_RGLRU * jax.nn.softplus(params["lam"]) * r
+    h = rglru_scan(i * xf, log_a, h0)
+    return h.astype(x.dtype), h[:, -1]
+
+
+# --------------------------- recurrent block ---------------------------------
+
+
+def rec_block_init(key, cfg) -> dict:
+    w = cfg.lru_width
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": norm_init(cfg, d),
+        "w_in_x": dense_init(ks[0], d, w),
+        "w_in_g": dense_init(ks[1], d, w),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(jnp.float32),
+        "lru": rglru_init(ks[3], cfg),
+        "w_out": dense_init(ks[4], w, d),
+        "ln2": norm_init(cfg, d),
+        "mlp": mlp_init(ks[5], cfg),
+    }
+
+
+def rec_block_axes(cfg) -> dict:
+    return {
+        "ln1": {"scale": (None,)},
+        "w_in_x": ("embed", "mlp"), "w_in_g": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "lru": {"w_a": ("mlp", "mlp2"), "b_a": (None,),
+                "w_x": ("mlp", "mlp2"), "b_x": (None,), "lam": ("mlp",)},
+        "w_out": ("mlp", "embed"),
+        "ln2": {"scale": (None,)},
+        "mlp": mlp_axes(cfg),
+    }
+
+
+def rec_block_apply(params, cfg, x, *, mode="train", cache=None):
+    b, t, d = x.shape
+    ct = x.dtype
+    y = norm(x, params["ln1"], cfg)
+    xb = y @ params["w_in_x"].astype(ct)
+    gb = jax.nn.gelu(y @ params["w_in_g"].astype(ct))
+
+    if getattr(cfg, "lru_batch_shard", False) and mode == "train":
+        # reshard batch over every mesh axis: the conv/gates/scan below are
+        # channel-local, so full batch sharding removes the gate-matmul
+        # partial-sum all-reduces entirely (§Perf, recurrentgemma train)
+        full = ("pod", "data", "model")
+        xb = wsc(xb, full, None, None)
+        gb = wsc(gb, full, None, None)
+    if mode == "decode":
+        seq = jnp.concatenate([cache["conv"].astype(ct), xb], axis=1)
+        xc = conv1d_depthwise_causal(seq, params["conv_w"].astype(ct))[:, -t:]
+        new_conv = seq[:, -(cfg.conv_width - 1):]
+        h0 = cache["h"]
+    else:
+        xc = conv1d_depthwise_causal(xb, params["conv_w"].astype(ct))
+        new_conv = xb[:, -(cfg.conv_width - 1):]
+        h0 = None
+
+    lru_out, h_f = rglru_apply(params["lru"], xc, h0,
+                               bf16_gates=getattr(cfg, "lru_bf16_gates", False),
+                               replicate_weights=getattr(cfg, "lru_batch_shard", False))
+    out = (lru_out * gb) @ params["w_out"].astype(ct)
+    x = x + wsc(out, BATCH, None, None)
+    x = x + mlp_apply(params["mlp"], cfg, norm(x, params["ln2"], cfg))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"h": h_f.astype(jnp.float32),
+                     "conv": new_conv.astype(ct)}
+    return x, new_cache
+
+
+def rec_cache_spec(cfg, batch: int) -> dict:
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.lru_width), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.conv_width - 1, cfg.lru_width),
+            dtype_of(cfg.compute_dtype)),
+    }
+
+
+# ------------------- local attention with rotating cache ---------------------
+
+
+def attn_block_init(key, cfg) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg, cfg.d_model),
+        "attn": attn_init(ka, cfg),
+        "ln2": norm_init(cfg, cfg.d_model),
+        "mlp": mlp_init(km, cfg),
+    }
+
+
+def attn_block_axes(cfg) -> dict:
+    return {"ln1": {"scale": (None,)}, "attn": attn_axes(cfg),
+            "ln2": {"scale": (None,)}, "mlp": mlp_axes(cfg)}
+
+
+def _rotating_decode_attn(params, cfg, y, cache, rope):
+    """Decode against a rotating window cache of capacity W = window."""
+    b, t, _ = y.shape
+    ct = y.dtype
+    W = cfg.attention_window
+    pos = cache["len"]  # absolute position of the next token
+    q = (y @ params["wq"].astype(ct)).reshape(b, t, cfg.num_heads, cfg.head_dim)
+    k = (y @ params["wk"].astype(ct)).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = (y @ params["wv"].astype(ct)).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    cos, sin = rope
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    slot = pos % W
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.transpose(0, 2, 1, 3),
+                                      (0, 0, slot, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.transpose(0, 2, 1, 3),
+                                      (0, 0, slot, 0))
+    # Slot j holds absolute position: the largest p <= pos with p % W == j.
+    j = jnp.arange(W)
+    kpos = pos - ((pos - j) % W)
+    valid = (kpos >= 0) & (kpos >= pos - W + 1)
+    g = cfg.num_heads // cfg.num_kv_heads
+    qh = q.transpose(0, 2, 1, 3).reshape(b, cfg.num_kv_heads, g, t, cfg.head_dim)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32))
+    out = out.reshape(b, cfg.num_heads, t, cfg.head_dim).transpose(0, 2, 1, 3)
+    out = out.reshape(b, t, cfg.q_dim).astype(ct) @ params["wo"].astype(ct)
+    return out, {"k": kc, "v": vc, "len": pos + t}
+
+
+def attn_block_apply(params, cfg, x, *, rope, positions, mode="train", cache=None):
+    y = norm(x, params["ln1"], cfg)
+    if mode == "decode":
+        h, new_cache = _rotating_decode_attn(params["attn"], cfg, y, cache, rope)
+        h = wsc(h, BATCH, None, None)
+    else:
+        h, _ = attn_apply(params["attn"], cfg, y, rope=rope, causal=True,
+                          window=cfg.attention_window, mode="train")
+        new_cache = None
+        if mode == "prefill":
+            # Build the rotating cache from the LAST W positions.
+            W = cfg.attention_window
+            ct = y.dtype
+            b, t, _ = y.shape
+            k = (y @ params["attn"]["wk"].astype(ct)).reshape(
+                b, t, cfg.num_kv_heads, cfg.head_dim)
+            v = (y @ params["attn"]["wv"].astype(ct)).reshape(
+                b, t, cfg.num_kv_heads, cfg.head_dim)
+            cos, sin = rope
+            k = apply_rope(k, cos, sin).transpose(0, 2, 1, 3)
+            v = v.transpose(0, 2, 1, 3)
+            kc = jnp.zeros((b, cfg.num_kv_heads, W, cfg.head_dim), ct)
+            vc = jnp.zeros_like(kc)
+            # Scatter position p into slot p % W for the last min(t, W) steps.
+            take = min(t, W)
+            p_abs = jnp.arange(t - take, t)
+            slots = p_abs % W
+            kc = kc.at[:, :, slots].set(k[:, :, t - take:])
+            vc = vc.at[:, :, slots].set(v[:, :, t - take:])
+            new_cache = {"k": kc, "v": vc, "len": jnp.asarray(t, jnp.int32)}
+    x = x + h
+    x = x + mlp_apply(params["mlp"], cfg, norm(x, params["ln2"], cfg))
+    return x, new_cache
+
+
+def attn_cache_spec(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    W = cfg.attention_window
+    shp = (batch, cfg.num_kv_heads, W, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype),
+            "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# --------------------------------- full LM ----------------------------------
+
+
+def init_lm(key, cfg) -> dict:
+    ke, kb, ko = jax.random.split(key, 3)
+    blocks = []
+    for i, kind in enumerate(cfg.pattern()):
+        kk = jax.random.fold_in(kb, i)
+        blocks.append(attn_block_init(kk, cfg) if kind == "A"
+                      else rec_block_init(kk, cfg))
+    p = {"embed": embed_init(ke, cfg.vocab_size, cfg.d_model),
+         "blocks": blocks, "ln_f": norm_init(cfg, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ko, cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def lm_axes(cfg) -> dict:
+    blocks = [attn_block_axes(cfg) if k == "A" else rec_block_axes(cfg)
+              for k in cfg.pattern()]
+    p = {"embed": ("vocab", "embed"), "blocks": blocks, "ln_f": {"scale": (None,)}}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("embed", "vocab")
+    return p
+
+
+def apply_lm(params, cfg, tokens, *, mode="train", caches=None, positions=None,
+             prefix_embeds=None, rope_override=None):
+    ct = dtype_of(cfg.compute_dtype)
+    x = params["embed"].astype(ct)[tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, ct)  # gemma-style embed scaling
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(ct), x], axis=1)
+    b, t, _ = x.shape
+    x = wsc(x, BATCH, None, None)
+
+    if positions is None:
+        offset = 0
+        if mode == "decode" and caches is not None:
+            for c, kind in zip(caches, cfg.pattern()):
+                if kind == "A":
+                    offset = c["len"]
+                    break
+        positions = default_positions(b, t, offset)
+    rope = rope_override or rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    if getattr(cfg, "cast_params_pre_scan", False):
+        ct2 = dtype_of(cfg.compute_dtype)
+        params = dict(params)
+        params["blocks"] = jax.tree.map(
+            lambda a: a.astype(ct2) if a.dtype == jnp.float32 else a,
+            params["blocks"])
+
+    new_caches = []
+    for i, kind in enumerate(cfg.pattern()):
+        blk = params["blocks"][i]
+        cache_l = None if caches is None else caches[i]
+        if kind == "A":
+            fn = lambda p_, x_, c_: attn_block_apply(
+                p_, cfg, x_, rope=rope, positions=positions, mode=mode, cache=c_)
+        else:
+            fn = lambda p_, x_, c_: rec_block_apply(p_, cfg, x_, mode=mode, cache=c_)
+        if cfg.remat != "none" and mode == "train":
+            fn = jax.checkpoint(fn)
+        x, nc = fn(blk, x, cache_l)
+        new_caches.append(nc)
+
+    x = norm(x, params["ln_f"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head.astype(ct), cfg.logit_softcap)
+    return wsc(logits, BATCH, None, "model"), (new_caches if mode != "train" else None)
+
+
+def init_caches(cfg, batch: int, s_max: int = 0, dtype=jnp.bfloat16) -> list:
+    del s_max  # attention caches are bounded by the window; LRU state is O(1)
+    return [attn_cache_spec(cfg, batch, dtype) if k == "A"
+            else rec_cache_spec(cfg, batch) for k in cfg.pattern()]
+
+
+def zeros_caches(cfg, batch: int, s_max: int = 0) -> list:
+    return [jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+            for spec in init_caches(cfg, batch)]

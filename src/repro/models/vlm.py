@@ -1,0 +1,74 @@
+"""Qwen2-VL backbone (arXiv:2409.12191): the decoder LM trunk with
+M-RoPE (multimodal rotary sections for temporal/height/width position
+streams).  The vision tower is a STUB per the brief: ``input_specs()``
+feeds precomputed patch embeddings, which the trunk consumes as a prefix
+ahead of the text tokens.  The patch-embedding conv itself is expressible
+as the reproduced paper's kn2row 1x1 GEMM (see core.kn2row), exercised in
+examples/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import dense
+from .common import default_positions, mrope_angles
+
+init_lm = dense.init_lm
+lm_axes = dense.lm_axes
+init_caches = dense.init_caches
+zeros_caches = dense.zeros_caches
+
+
+def mrope_positions(b: int, num_patches: int, t_text: int,
+                    grid: tuple[int, int] | None = None) -> jax.Array:
+    """Default M-RoPE position ids (3, b, t_total): vision patches get
+    (t=0, h=row, w=col); text tokens advance all three streams together
+    starting after the vision extent (the Qwen2-VL scheme)."""
+    if grid is None:
+        side = max(int(num_patches ** 0.5), 1)
+        grid = (side, max(1, -(-num_patches // side)))
+    gh, gw = grid
+    rows = (jnp.arange(num_patches) // gw).astype(jnp.int32)
+    cols = (jnp.arange(num_patches) % gw).astype(jnp.int32)
+    tpos = jnp.zeros((num_patches,), jnp.int32)
+    start = int(max(gh, gw))
+    text = jnp.arange(t_text, dtype=jnp.int32) + start
+    three = jnp.stack([
+        jnp.concatenate([tpos, text]),
+        jnp.concatenate([rows, text]),
+        jnp.concatenate([cols, text]),
+    ])  # (3, t_total)
+    return jnp.broadcast_to(three[:, None, :], (3, b, num_patches + t_text))
+
+
+def apply_lm(params, cfg, tokens, *, mode="train", caches=None, positions=None,
+             prefix_embeds=None, rope_override=None):
+    """positions: (3, b, t_total) M-RoPE ids; derived when omitted."""
+    b = tokens.shape[0]
+    t_text = tokens.shape[1]
+    npatch = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+
+    if rope_override is None:
+        if positions is None:
+            if mode == "decode" and caches is not None:
+                # Continue the M-RoPE *text* stream: text positions start at
+                # max(grid) after the vision prefix, so the next position is
+                # start + text_len = start + (cache_len - num_patches).
+                np_pref = cfg.num_patches
+                side = max(int(np_pref ** 0.5), 1)
+                gw = max(1, -(-np_pref // side))
+                start = int(max(side, gw)) if np_pref > 0 else 0
+                off = caches["len"][0] - np_pref + start
+                pos1 = (jnp.zeros((b, t_text), jnp.int32) + off
+                        + jnp.arange(t_text, dtype=jnp.int32)[None])
+                positions = jnp.broadcast_to(pos1[None], (3, b, t_text))
+            else:
+                positions = mrope_positions(b, npatch, t_text)
+        rope_override = mrope_angles(positions, cfg.mrope_sections,
+                                     cfg.head_dim, cfg.rope_theta)
+
+    return dense.apply_lm(params, cfg, tokens, mode=mode, caches=caches,
+                          positions=None, prefix_embeds=prefix_embeds,
+                          rope_override=rope_override)

@@ -1,0 +1,440 @@
+"""xLSTM blocks (arXiv:2405.04517): sLSTM (scalar memory, true recurrence)
+and mLSTM (matrix memory, chunkwise-parallel trainable).
+
+The causal conv1d inside both blocks uses the paper's kn2row 1-D
+decomposition (``repro.core.kn2row``) -- the direct application of the
+reproduced paper's algorithm to this architecture (DESIGN.md
+§Arch-applicability).
+
+mLSTM state:  C in R^{dh x dh}, n in R^{dh}, m (log-stabilizer) per head.
+  C_t = f_t C_{t-1} + i_t v_t k_t^T,  n_t = f_t n_{t-1} + i_t k_t,
+  h_t = (C_t q_t) / max(|n_t . q_t|, 1)   with exp-gating stabilized by m.
+Chunkwise form: within a chunk of W steps the contribution is an
+attention-like matrix with decay D_{ts} = exp(F_t - F_s + logi_s); across
+chunks the (C, n, m) state carries.  ``mlstm_chunkwise`` == ``mlstm_recurrent``
+to numerical precision (tests/test_xlstm.py).
+
+sLSTM is sequential by construction (h_{t-1} feeds the gates through
+block-diagonal recurrent matrices R); it runs as a lax.scan over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.kn2row import conv1d_depthwise_causal
+from .common import BATCH, dense_init, dtype_of, embed_init, norm, norm_init, wsc
+
+# --------------------------------- mLSTM cell -------------------------------
+
+
+def mlstm_recurrent(q, k, v, i_pre, f_pre, state=None):
+    """Exact recurrence (reference + decode path).
+
+    q,k,v: (b, h, t, dh); i_pre,f_pre: (b, h, t) gate pre-activations.
+    state: optional (C (b,h,dh,dh), n (b,h,dh), m (b,h)) scaled by exp(-m).
+    Returns (out (b,h,t,dh), final_state)."""
+    b, h, t, dh = q.shape
+    k = k * (dh ** -0.5)
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (q, k, v)) + tuple(
+        a.transpose(2, 0, 1) for a in (i_pre, f_pre))
+    (Cf, nf, mf), out = jax.lax.scan(step, (C0, n0, m0), xs)
+    return out.transpose(1, 2, 0, 3), (Cf, nf, mf)
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state=None, chunk: int = 64):
+    """Chunkwise-parallel mLSTM: intra-chunk attention-with-decay + carried
+    inter-chunk state.  Exact (same stabilized math as the recurrence)."""
+    b, h, t, dh = q.shape
+    k = k * (dh ** -0.5)
+    W = min(chunk, t)
+    pad = (-t) % W
+    if pad:
+        z4 = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        z3 = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+        q, k, v = z4(q), z4(k), z4(v)
+        # Padded steps: i = -inf (no input), f = 0 (keep state).
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        f_pre = z3(f_pre)
+    tp = t + pad
+    nc = tp // W
+
+    qc = q.reshape(b, h, nc, W, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    kc = k.reshape(b, h, nc, W, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    vc = v.reshape(b, h, nc, W, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    ic = i_pre.reshape(b, h, nc, W).transpose(2, 0, 1, 3).astype(jnp.float32)
+    fc = f_pre.reshape(b, h, nc, W).transpose(2, 0, 1, 3).astype(jnp.float32)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((W, W), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m_in = carry
+        qt, kt, vt, it, ft = xs               # (b,h,W,[dh])
+        F = jnp.cumsum(ft, axis=-1)           # (b,h,W) cumulative log-decay
+        # Intra-chunk log weights: D[t,s] = F_t - F_s + i_s  for s <= t.
+        D = F[..., :, None] - F[..., None, :] + it[..., None, :]
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = D.max(axis=-1)              # (b,h,W)
+        m_comb = jnp.maximum(F + m_in[..., None], m_intra)
+        m_comb = jnp.maximum(m_comb, -1e30)   # avoid inf-inf when everything is empty
+        # Intra contribution.
+        logits = jnp.einsum("bhtd,bhsd->bhts", qt, kt)
+        S = logits * jnp.exp(D - m_comb[..., None])
+        num = jnp.einsum("bhts,bhsd->bhtd", S, vt)
+        den = S.sum(axis=-1)
+        # Inter (carried state) contribution.  C layout: [v-dim, k-dim];
+        # contract q against the k-dim (as num = C q in the recurrence).
+        inter_scale = jnp.exp(F + m_in[..., None] - m_comb)   # (b,h,W)
+        num = num + jnp.einsum("bhte,bhde->bhtd", qt, C) * inter_scale[..., None]
+        den = den + jnp.einsum("bhtd,bhd->bht", qt, n) * inter_scale
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_comb))[..., None]
+        # State update to end-of-chunk.
+        F_tot = F[..., -1:]                                   # (b,h,1)
+        m_state = jnp.maximum(F_tot[..., 0] + m_in,
+                              (F_tot - F + it).max(axis=-1))
+        decay_state = jnp.exp(F_tot[..., 0] + m_in - m_state)
+        w_s = jnp.exp(F_tot - F + it - m_state[..., None])    # (b,h,W)
+        C_new = decay_state[..., None, None] * C + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_s, vt, kt)
+        n_new = decay_state[..., None] * n + jnp.einsum("bhs,bhsd->bhd", w_s, kt)
+        return (C_new, n_new, m_state), out
+
+    (Cf, nf, mf), outs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, tp, dh)[:, :, :t]
+    return out, (Cf, nf, mf)
+
+
+# ------------------------------- mLSTM block --------------------------------
+
+
+def mlstm_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = int(d * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": norm_init(cfg, d),
+        "w_up_x": dense_init(ks[0], d, di),
+        "w_up_z": dense_init(ks[1], d, di),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, di)) * 0.1).astype(jnp.float32),
+        "wq": dense_init(ks[3], di, di),
+        "wk": dense_init(ks[4], di, di),
+        "wv": dense_init(ks[5], di, di),
+        "w_i": dense_init(ks[6], di, h),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": dense_init(ks[7], di, h),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget-gate bias: start remembering
+        "gn": jnp.zeros((di,), jnp.float32),
+        "w_down": dense_init(jax.random.fold_in(key, 9), di, d),
+    }
+
+
+def mlstm_block_axes(cfg) -> dict:
+    return {
+        "ln": {"scale": (None,)},
+        "w_up_x": ("embed", "mlp"), "w_up_z": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "wq": ("mlp", "mlp2"), "wk": ("mlp", "mlp2"), "wv": ("mlp", "mlp2"),
+        "w_i": ("mlp", None), "b_i": (None,),
+        "w_f": ("mlp", None), "b_f": (None,),
+        "gn": ("mlp",),
+        "w_down": ("mlp", "embed"),
+    }
+
+
+def _groupnorm_heads(x, scale, heads: int, eps=1e-5):
+    """GroupNorm over head groups: x (b, t, di)."""
+    b, t, di = x.shape
+    xh = x.astype(jnp.float32).reshape(b, t, heads, di // heads)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, t, di) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def mlstm_block_apply(params, cfg, x, *, mode="train", cache=None):
+    """x: (b, t, d). cache (decode): {C, n, m, conv} rolling state."""
+    b, t, d = x.shape
+    ct = x.dtype
+    h = cfg.num_heads
+    di = params["w_up_x"].shape[1]
+    dh = di // h
+
+    y = norm(x, params["ln"], cfg)
+    x_in = y @ params["w_up_x"].astype(ct)
+    z = y @ params["w_up_z"].astype(ct)
+
+    # Causal depthwise conv -- the paper's kn2row-1D path.
+    if mode == "decode":
+        conv_buf = cache["conv"]  # (b, w-1, di): previous inputs
+        seq = jnp.concatenate([conv_buf.astype(ct), x_in], axis=1)
+        x_conv = conv1d_depthwise_causal(seq, params["conv_w"].astype(ct))[:, -t:]
+        new_conv = seq[:, -(cfg.conv_width - 1):]
+    else:
+        x_conv = conv1d_depthwise_causal(x_in, params["conv_w"].astype(ct))
+        new_conv = x_in[:, -(cfg.conv_width - 1):]
+    x_conv = jax.nn.silu(x_conv)
+
+    def heads_split(a):
+        return a.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    q = heads_split(x_conv @ params["wq"].astype(ct)).astype(jnp.float32)
+    k = heads_split(x_conv @ params["wk"].astype(ct)).astype(jnp.float32)
+    v = heads_split(x_in @ params["wv"].astype(ct)).astype(jnp.float32)
+    i_pre = (x_conv @ params["w_i"].astype(ct) + params["b_i"].astype(ct)) \
+        .astype(jnp.float32).transpose(0, 2, 1)
+    f_pre = jax.nn.log_sigmoid(
+        (x_conv @ params["w_f"].astype(ct) + params["b_f"].astype(ct))
+        .astype(jnp.float32)).transpose(0, 2, 1)
+
+    state = None
+    if mode == "decode":
+        state = (cache["C"], cache["n"], cache["m"])
+    if mode == "decode" or t <= cfg.mlstm_chunk:
+        out, new_state = mlstm_recurrent(q, k, v, i_pre, f_pre, state)
+    else:
+        out, new_state = mlstm_chunkwise(q, k, v, i_pre, f_pre, state,
+                                         chunk=cfg.mlstm_chunk)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, di).astype(ct)
+    out = _groupnorm_heads(out, params["gn"], h)
+    out = out * jax.nn.silu(z)
+    out = out @ params["w_down"].astype(ct)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        C, n, m = new_state
+        new_cache = {"C": C, "n": n, "m": m, "conv": new_conv.astype(ct)}
+    return x + wsc(out, BATCH, None, None), new_cache
+
+
+def mlstm_cache_spec(cfg, batch: int) -> dict:
+    di = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    dh = di // h
+    return {
+        "C": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, di),
+                                     dtype_of(cfg.compute_dtype)),
+    }
+
+
+# ------------------------------- sLSTM block --------------------------------
+
+
+def slstm_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 12)
+    gate_w = lambda kk: dense_init(kk, d, d)
+    rec_w = lambda kk: (jax.random.normal(kk, (h, dh, dh)) * (dh ** -0.5)).astype(jnp.float32)
+    dff = int(d * cfg.slstm_proj_factor)
+    return {
+        "ln": norm_init(cfg, d),
+        "conv_w": (jax.random.normal(ks[0], (cfg.conv_width, d)) * 0.1).astype(jnp.float32),
+        "wz": gate_w(ks[1]), "wi": gate_w(ks[2]), "wf": gate_w(ks[3]), "wo": gate_w(ks[4]),
+        "rz": rec_w(ks[5]), "ri": rec_w(ks[6]), "rf": rec_w(ks[7]), "ro": rec_w(ks[8]),
+        "bz": jnp.zeros((d,), jnp.float32), "bi": jnp.zeros((d,), jnp.float32),
+        "bf": jnp.full((d,), 3.0, jnp.float32), "bo": jnp.zeros((d,), jnp.float32),
+        "gn": jnp.zeros((d,), jnp.float32),
+        "w_up1": dense_init(ks[9], d, dff),
+        "w_up2": dense_init(ks[10], d, dff),
+        "w_down": dense_init(ks[11], dff, d),
+    }
+
+
+def slstm_block_axes(cfg) -> dict:
+    return {
+        "ln": {"scale": (None,)},
+        "conv_w": (None, "embed"),
+        "wz": ("embed", "embed2"), "wi": ("embed", "embed2"),
+        "wf": ("embed", "embed2"), "wo": ("embed", "embed2"),
+        "rz": ("heads", None, None), "ri": ("heads", None, None),
+        "rf": ("heads", None, None), "ro": ("heads", None, None),
+        "bz": (None,), "bi": (None,), "bf": (None,), "bo": (None,),
+        "gn": ("embed",),
+        "w_up1": ("embed", "mlp"), "w_up2": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+
+
+def slstm_block_apply(params, cfg, x, *, mode="train", cache=None):
+    b, t, d = x.shape
+    ct = x.dtype
+    h = cfg.num_heads
+    dh = d // h
+
+    y = norm(x, params["ln"], cfg)
+    if mode == "decode":
+        seq = jnp.concatenate([cache["conv"].astype(ct), y], axis=1)
+        y_conv = conv1d_depthwise_causal(seq, params["conv_w"].astype(ct))[:, -t:]
+        new_conv = seq[:, -(cfg.conv_width - 1):]
+    else:
+        y_conv = conv1d_depthwise_causal(y, params["conv_w"].astype(ct))
+        new_conv = y[:, -(cfg.conv_width - 1):]
+    y_conv = jax.nn.silu(y_conv)
+
+    # Gate input projections (i, f use the conv path -- xLSTM paper).
+    gz = (y @ params["wz"].astype(ct) + params["bz"].astype(ct)).astype(jnp.float32)
+    go = (y @ params["wo"].astype(ct) + params["bo"].astype(ct)).astype(jnp.float32)
+    gi = (y_conv @ params["wi"].astype(ct) + params["bi"].astype(ct)).astype(jnp.float32)
+    gf = (y_conv @ params["wf"].astype(ct) + params["bf"].astype(ct)).astype(jnp.float32)
+
+    def heads_view(a):  # (b, t, d) -> (t, b, h, dh)
+        return a.reshape(b, t, h, dh).transpose(1, 0, 2, 3)
+
+    if mode == "decode" and cache is not None:
+        carry0 = (cache["c"], cache["n"], cache["m"], cache["h"])
+    else:
+        z0 = jnp.zeros((b, h, dh), jnp.float32)
+        carry0 = (z0, z0, jnp.full((b, h, dh), -jnp.inf, jnp.float32), z0)
+
+    def step(carry, xs):
+        c, n, m, h_prev = carry
+        zt, it, ft, ot = xs
+        rec = lambda w: jnp.einsum("bhj,hjk->bhk", h_prev, w)
+        zt = jnp.tanh(zt + rec(params["rz"]))
+        ot = jax.nn.sigmoid(ot + rec(params["ro"]))
+        it = it + rec(params["ri"])
+        ft = jax.nn.log_sigmoid(ft + rec(params["rf"]))
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    xs = tuple(heads_view(a) for a in (gz, gi, gf, go))
+    (cf, nf, mf, hf), hs = jax.lax.scan(step, carry0, xs)
+    out = hs.transpose(1, 0, 2, 3).reshape(b, t, d).astype(ct)
+    out = _groupnorm_heads(out, params["gn"], h)
+    # Post up/down projection (GeGLU, pf = 4/3).
+    up = jax.nn.gelu(out @ params["w_up1"].astype(ct)) * (out @ params["w_up2"].astype(ct))
+    out = up @ params["w_down"].astype(ct)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"c": cf, "n": nf, "m": mf, "h": hf,
+                     "conv": new_conv.astype(ct)}
+    return x + wsc(out, BATCH, None, None), new_cache
+
+
+def slstm_cache_spec(cfg, batch: int) -> dict:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    s = jax.ShapeDtypeStruct((batch, h, dh), jnp.float32)
+    return {"c": s, "n": s, "m": s, "h": s,
+            "conv": jax.ShapeDtypeStruct(
+                (batch, cfg.conv_width - 1, cfg.d_model), jnp.bfloat16)}
+
+
+# --------------------------------- full LM ----------------------------------
+
+
+def init_lm(key, cfg) -> dict:
+    ke, kb, ko = jax.random.split(key, 3)
+    pattern = cfg.pattern()
+    blocks = []
+    for i, kind in enumerate(pattern):
+        kk = jax.random.fold_in(kb, i)
+        blocks.append(mlstm_block_init(kk, cfg) if kind == "m"
+                      else slstm_block_init(kk, cfg))
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "ln_f": norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ko, cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def lm_axes(cfg) -> dict:
+    blocks = [mlstm_block_axes(cfg) if k == "m" else slstm_block_axes(cfg)
+              for k in cfg.pattern()]
+    p = {"embed": ("vocab", "embed"), "blocks": blocks, "ln_f": {"scale": (None,)}}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("embed", "vocab")
+    return p
+
+
+def apply_lm(params, cfg, tokens, *, mode="train", caches=None, positions=None,
+             prefix_embeds=None, rope_override=None):
+    del positions, rope_override  # recurrent family: no rope
+    ct = dtype_of(cfg.compute_dtype)
+    x = params["embed"].astype(ct)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(ct), x], axis=1)
+    x = wsc(x, BATCH, None, None)
+
+    if getattr(cfg, "cast_params_pre_scan", False):
+        ct2 = dtype_of(cfg.compute_dtype)
+        params = dict(params)
+        params["blocks"] = jax.tree.map(
+            lambda a: a.astype(ct2) if a.dtype == jnp.float32 else a,
+            params["blocks"])
+
+    new_caches = []
+    for i, kind in enumerate(cfg.pattern()):
+        blk = params["blocks"][i]
+        cache_l = None if caches is None else caches[i]
+        block_fn = mlstm_block_apply if kind == "m" else slstm_block_apply
+        fn = lambda p_, x_, c_, f_=block_fn: f_(p_, cfg, x_, mode=mode, cache=c_)
+        if cfg.remat != "none" and mode == "train":
+            fn = jax.checkpoint(fn)
+        x, nc = fn(blk, x, cache_l)
+        new_caches.append(nc)
+
+    x = norm(x, params["ln_f"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(ct)
+    return wsc(logits, BATCH, None, "model"), (new_caches if mode != "train" else None)
+
+
+def init_caches(cfg, batch: int, s_max: int = 0, dtype=jnp.bfloat16) -> list:
+    """Per-layer recurrent state specs (list, heterogeneous pattern)."""
+    del s_max, dtype  # state is O(1) in sequence length -- the ssm advantage
+    return [mlstm_cache_spec(cfg, batch) if k == "m" else slstm_cache_spec(cfg, batch)
+            for k in cfg.pattern()]
+
+
+def zeros_caches(cfg, batch: int, s_max: int = 0) -> list:
+    caches = []
+    for k, spec in zip(cfg.pattern(), init_caches(cfg, batch)):
+        z = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        z["m"] = jnp.full(z["m"].shape, -1e30, jnp.float32)  # empty-state stabilizer
+        caches.append(z)
+    return caches

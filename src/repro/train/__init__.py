@@ -1,0 +1,2 @@
+"""Training: step factory, checkpointing, elasticity."""
+from . import checkpoint, elastic, train_loop

@@ -1,0 +1,105 @@
+"""Config invariants (property-tested) + the loop-aware HLO cost parser
+on a synthetic module with known counts."""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.launch import hlo_cost
+
+
+# ------------------------------ config invariants ----------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_invariants(arch):
+    for cfg in (get_config(arch), get_smoke(arch)):
+        assert cfg.num_heads % cfg.num_kv_heads == 0
+        assert cfg.q_dim == cfg.num_heads * cfg.head_dim
+        assert len(cfg.pattern()) == cfg.num_layers
+        assert cfg.param_count() > 0
+        if cfg.num_experts:
+            assert cfg.param_count(active_only=True) < cfg.param_count()
+
+
+def test_param_count_sanity():
+    """Full-size param counts should be within ~35% of the names."""
+    expect = {
+        "qwen2-72b": 72e9, "qwen1.5-32b": 32e9, "nemotron-4-15b": 15e9,
+        "smollm-360m": 360e6, "recurrentgemma-2b": 2.7e9,
+        "phi3.5-moe-42b-a6.6b": 42e9, "qwen2-vl-2b": 2e9,
+    }
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * n < got < 1.6 * n, (arch, got, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    active = cfg.param_count(active_only=True)
+    assert 4e9 < active < 9e9, active  # ~6.6B active
+
+
+@settings(max_examples=20, deadline=None)
+@given(layers=st.integers(1, 8), heads=st.integers(1, 16),
+       kv_div=st.integers(1, 4))
+def test_config_property(layers, heads, kv_div):
+    kv = max(1, heads // kv_div)
+    if heads % kv:
+        kv = heads
+    cfg = dataclasses.replace(
+        get_smoke("smollm-360m"), num_layers=layers, num_heads=heads,
+        num_kv_heads=kv, head_dim=8)
+    assert cfg.param_count() > 0
+    assert len(cfg.pattern()) == layers
+
+
+# ------------------------------- hlo_cost parser -----------------------------
+
+
+SYNTH = """HloModule synth, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %d = f32[128,128]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,128]{1,0}) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[128,128])) -> pred[] {
+  %p2 = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %init = (s32[], f32[128,128]{1,0}) tuple()
+  %w = (s32[], f32[128,128]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_hlo_cost_counts_loop_trips():
+    r = hlo_cost.analyze(SYNTH)
+    # dot: 2 * 128*128 * 128 flops, x 10 trips (+ small elementwise adds)
+    dot_flops = 2 * 128 * 128 * 128 * 10
+    assert dot_flops <= r["flops"] <= dot_flops * 1.05, r["flops"]
+    # all-reduce: 128*128*4 bytes * 2(k-1)/k with k=16, x 10 trips
+    expect = 128 * 128 * 4 * 2 * 15 / 16 * 10
+    assert abs(r["coll_link_bytes"] - expect) / expect < 0.01
+    assert r["while_trips"] == {"body": 10}
+
+
+def test_hlo_cost_zero_cost_ops_free():
+    r = hlo_cost.analyze(SYNTH)
+    # bytes: only the dot (operands+result); tuples/GTE/parameters free.
+    dot_bytes = 3 * 128 * 128 * 4 * 10 + 2 * 128 * 128 * 4 * 10  # dot + AR rw
+    assert r["bytes_hbm"] <= dot_bytes * 1.05

@@ -1,0 +1,80 @@
+"""Cost model (§IV): Table I constants, Fig 8 monotonicity, Fig 9 ratios
+after calibration must reproduce the paper's headline numbers."""
+
+import pytest
+
+from repro.core import costmodel as cm
+
+
+def test_table_i_values():
+    """Table I is transcribed exactly from the paper."""
+    assert cm.MEMORY_TABLE["ReRAM"] == (1.907, 1.623, 15.274, 13.948)
+    assert cm.MEMORY_TABLE["eDRAM"] == (3.407, 3.324, 34.207, 66.661)
+    assert cm.MEMORY_TABLE["SRAM"] == (6.687, 6.688, 144.556, 279.546)
+    assert cm.MEMORY_TABLE["STT-RAM"] == (2.102, 1.975, 13.469, 18.06)
+
+
+def test_table_i_orderings():
+    """Paper's observations: ReRAM beats eDRAM/SRAM on all four metrics;
+    vs STT-RAM it wins energy + read latency, loses write latency."""
+    rr, ed, sr, st = (cm.MEMORY_TABLE[k] for k in ("ReRAM", "eDRAM", "SRAM", "STT-RAM"))
+    for i in range(4):
+        assert rr[i] < ed[i] < sr[i]
+    assert rr[0] < st[0] and rr[1] < st[1] and rr[3] < st[3]
+    assert rr[2] > st[2]  # write latency is ReRAM's known weakness
+
+
+def test_fig8_monotone_and_normalized():
+    rows = cm.normalized_fig8()
+    assert rows[0]["layers"] == 2
+    assert rows[0]["read_latency"] == pytest.approx(1.0)
+    assert rows[0]["read_energy"] == pytest.approx(1.0)
+    for a, b in zip(rows, rows[1:]):
+        assert b["read_latency"] > a["read_latency"]
+        assert b["read_energy"] > a["read_energy"]
+        assert b["write_latency"] > a["write_latency"]
+
+
+def test_flops_formula():
+    l = cm.ConvLayer("x", n=2, c=3, h=4, w=5, l=3)
+    assert l.flops == 2 * 2 * 3 * 9 * 4 * 5
+
+
+def test_3d_faster_and_cheaper_than_2d_per_layer():
+    for wl in cm.PAPER_WORKLOADS:
+        r3, r2 = cm.cost_3d_reram(wl), cm.cost_2d_reram(wl)
+        assert r3.time_s < r2.time_s, wl.name
+        assert r3.energy_j < r2.energy_j, wl.name
+
+
+def test_calibrated_model_reproduces_paper_fig9():
+    """The four calibrated ratios must match the paper's numbers tightly;
+    the two predicted energy ratios must land within 2x (cross-check --
+    they share no dedicated knob)."""
+    hw = cm.calibrate()
+    r = cm.evaluate_fig9(hw=hw)
+    p = cm.PAPER_FIG9
+    assert r.speedup_vs_2d == pytest.approx(p.speedup_vs_2d, rel=0.02)
+    assert r.speedup_vs_cpu == pytest.approx(p.speedup_vs_cpu, rel=0.02)
+    assert r.speedup_vs_gpu == pytest.approx(p.speedup_vs_gpu, rel=0.02)
+    assert r.energy_saving_vs_2d == pytest.approx(p.energy_saving_vs_2d, rel=0.05)
+    assert p.energy_saving_vs_cpu / 3 < r.energy_saving_vs_cpu < p.energy_saving_vs_cpu * 3
+    assert p.energy_saving_vs_gpu / 3 < r.energy_saving_vs_gpu < p.energy_saving_vs_gpu * 3
+
+
+def test_calibrated_knobs_physically_plausible():
+    hw = cm.calibrate()
+    assert 1.0 < hw.fig8_lat_16 < 8.0          # Fig 8 shows a modest rise
+    assert 0.5 <= hw.e_adc_pJ <= 60.0          # Murmann survey envelope
+    assert 0.001 < hw.cpu_eta < 0.6            # measured TF efficiency range
+    assert 0.001 < hw.gpu_eta < 0.6
+
+
+def test_default_constants_close_to_calibrated():
+    """DEFAULT_HW ships the calibrated values so users get paper-faithful
+    numbers without re-running calibration."""
+    r = cm.evaluate_fig9()
+    p = cm.PAPER_FIG9
+    assert r.speedup_vs_2d == pytest.approx(p.speedup_vs_2d, rel=0.10)
+    assert r.speedup_vs_cpu == pytest.approx(p.speedup_vs_cpu, rel=0.10)
+    assert r.speedup_vs_gpu == pytest.approx(p.speedup_vs_gpu, rel=0.10)

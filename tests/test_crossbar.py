@@ -1,0 +1,92 @@
+"""Crossbar signal-chain simulator: quantization fidelity, scheme equivalence,
+op-amp subtraction, high-precision convergence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crossbar as xbar
+
+
+CFG_HI = xbar.CrossbarConfig(weight_bits=14, dac_bits=14, adc_bits=16, g_on_off_ratio=1e9)
+
+
+def test_high_precision_converges_to_exact():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    got = xbar.crossbar_vmm(x, w, CFG_HI)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-2, atol=5e-3)
+
+
+def test_ideal_scheme_is_exact():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+    w = jax.random.normal(jax.random.PRNGKey(3), (8, 8))
+    cfg = xbar.CrossbarConfig(scheme="ideal")
+    np.testing.assert_allclose(xbar.crossbar_vmm(x, w, cfg), x @ w, rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_error_decreases_with_bits(bits):
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 32))
+    exact = x @ w
+
+    def err(b):
+        cfg = xbar.CrossbarConfig(weight_bits=b, dac_bits=b, adc_bits=b + 2,
+                                  g_on_off_ratio=1e9)
+        out = xbar.crossbar_vmm(x, w, cfg)
+        return float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+
+    assert err(bits + 2) < err(bits) * 1.05  # monotone (small slack for ties)
+
+
+def test_opamp_difference_identity():
+    """Paper Fig. 7(e) proof: I2 = I_p - I_n."""
+    ip = jnp.array([1.0, 2.0, 3.0])
+    in_ = jnp.array([0.5, 2.5, 1.0])
+    np.testing.assert_allclose(xbar.opamp_difference(ip, in_), ip - in_)
+
+
+def test_conductances_nonnegative():
+    w = jax.random.normal(jax.random.PRNGKey(6), (16, 16))
+    g_pos, g_neg, scale = xbar.program_conductances(w, xbar.CrossbarConfig())
+    assert float(g_pos.min()) >= 0.0 and float(g_neg.min()) >= 0.0
+    assert float(scale) > 0.0
+
+
+def test_tiled_matches_untiled_high_precision():
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 300))
+    w = jax.random.normal(jax.random.PRNGKey(8), (300, 200))
+    got = xbar.crossbar_vmm_tiled(x, w, CFG_HI, tile_k=128, tile_m=128)
+    np.testing.assert_allclose(got, x @ w, rtol=2e-2, atol=2e-2)
+
+
+def test_read_noise_requires_key_and_perturbs():
+    x = jnp.ones((2, 8))
+    w = jnp.ones((8, 4))
+    cfg = dataclasses.replace(CFG_HI, read_noise_sigma=0.05)
+    with pytest.raises(ValueError):
+        xbar.crossbar_vmm(x, w, cfg)
+    out = xbar.crossbar_vmm(x, w, cfg, key=jax.random.PRNGKey(9))
+    assert not np.allclose(out, x @ w, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 48), m=st.integers(1, 48), seed=st.integers(0, 2**31 - 1)
+)
+def test_property_bounded_relative_error(k, m, seed):
+    """8-bit chain keeps relative error bounded for well-conditioned inputs."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (4, k))
+    w = jax.random.normal(k2, (k, m))
+    cfg = xbar.CrossbarConfig(weight_bits=8, dac_bits=8, adc_bits=12, g_on_off_ratio=1e9)
+    out = xbar.crossbar_vmm(x, w, cfg)
+    exact = x @ w
+    denom = float(jnp.linalg.norm(exact)) + 1e-6
+    rel = float(jnp.linalg.norm(out - exact)) / denom
+    assert rel < 0.15, rel

@@ -1,0 +1,131 @@
+"""Pallas kernel tests: shape/dtype sweeps against the ref.py oracles,
+interpret mode (kernel bodies execute on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crossbar as xbar
+from repro.kernels import conv1d_causal, crossbar_linear_pallas, crossbar_vmm, kn2row_conv
+from repro.kernels.conv1d.ref import conv1d_causal_ref
+from repro.kernels.crossbar_vmm.ref import crossbar_vmm_ref
+from repro.kernels.kn2row.ref import kn2row_conv_ref
+
+
+def _tol(dtype):
+    # bf16 inputs: oracle runs in fp32; kernel output rounds to bf16 once.
+    return dict(rtol=3e-2, atol=8e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------- kn2row ------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (b, c, h, w, n, l1, l2)
+    (1, 4, 8, 16, 8, 3, 3),
+    (2, 5, 16, 16, 7, 3, 3),
+    (1, 3, 8, 16, 4, 5, 5),
+    (1, 8, 8, 16, 16, 1, 1),
+    (1, 2, 16, 32, 3, 1, 3),
+])
+def test_kn2row_kernel_sweep(shape, dtype):
+    b, c, h, w, n, l1, l2 = shape
+    k = jax.random.PRNGKey(hash(shape) % 2**31)
+    img = jax.random.normal(k, (b, c, h, w), dtype=dtype)
+    ker = jax.random.normal(jax.random.fold_in(k, 1), (n, c, l1, l2), dtype=dtype)
+    got = kn2row_conv(img, ker, th=8, tw=16, ct=min(8, c))
+    want = kn2row_conv_ref(img.astype(jnp.float32), ker.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_kn2row_kernel_tile_padding():
+    """Non-divisible h/w/c exercise the pad-and-crop path."""
+    k = jax.random.PRNGKey(0)
+    img = jax.random.normal(k, (1, 5, 9, 13))
+    ker = jax.random.normal(jax.random.fold_in(k, 1), (6, 5, 3, 3))
+    got = kn2row_conv(img, ker, th=4, tw=8, ct=4)
+    want = kn2row_conv_ref(img, ker)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(c=st.integers(1, 6), n=st.integers(1, 8),
+       l=st.sampled_from([1, 3, 5]), seed=st.integers(0, 2**31 - 1))
+def test_kn2row_kernel_property(c, n, l, seed):
+    k = jax.random.PRNGKey(seed)
+    img = jax.random.normal(k, (1, c, 8, 16))
+    ker = jax.random.normal(jax.random.fold_in(k, 1), (n, c, l, l))
+    got = kn2row_conv(img, ker, th=8, tw=16, ct=min(4, c))
+    want = kn2row_conv_ref(img, ker)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+# --------------------------------- conv1d ------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,c,l", [
+    (1, 16, 8, 4), (2, 32, 16, 4), (1, 8, 4, 1), (3, 24, 12, 7),
+])
+def test_conv1d_kernel_sweep(b, t, c, l, dtype):
+    k = jax.random.PRNGKey(b * 1000 + t + c + l)
+    x = jax.random.normal(k, (b, t, c), dtype=dtype)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (l, c), dtype=dtype)
+    got = conv1d_causal(x, w, tt=8, ct=min(8, c))
+    want = conv1d_causal_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_conv1d_kernel_equals_model_path():
+    """The kernel must agree with the conv used inside xLSTM/RG-LRU blocks."""
+    from repro.core.kn2row import conv1d_depthwise_causal
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (2, 20, 10))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (4, 10))
+    np.testing.assert_allclose(conv1d_causal(x, w, tt=4, ct=4),
+                               conv1d_depthwise_causal(x, w),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------- crossbar_vmm --------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (10, 24, 12), (128, 128, 128)])
+@pytest.mark.parametrize("adc_bits", [6, 10])
+def test_crossbar_kernel_sweep(m, k, n, adc_bits):
+    kk = jax.random.PRNGKey(m + k + n)
+    v = jax.random.normal(kk, (m, k))
+    gp = jax.nn.relu(jax.random.normal(jax.random.fold_in(kk, 1), (k, n)))
+    gn = jax.nn.relu(jax.random.normal(jax.random.fold_in(kk, 2), (k, n)))
+    ir = jnp.asarray([float(k)])
+    got = crossbar_vmm(v, gp, gn, ir, adc_bits=adc_bits, tm=8, tn=8, tk=8)
+    want = crossbar_vmm_ref(v, gp, gn, ir, adc_bits=adc_bits)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_crossbar_kernel_signed_linear_end_to_end():
+    """Signed-weight entry point vs the core simulator (same quantization
+    config, separated scheme, per-column full-scale)."""
+    kk = jax.random.PRNGKey(9)
+    x = jax.random.normal(kk, (6, 32))
+    w = jax.random.normal(jax.random.fold_in(kk, 1), (32, 16)) * 0.1
+    cfg = xbar.CrossbarConfig(weight_bits=8, dac_bits=8, adc_bits=12,
+                              g_on_off_ratio=1e9)
+    got = crossbar_linear_pallas(x, w, cfg, tm=8, tn=8, tk=8)
+    exact = x @ w
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.05, rel
+
+
+def test_crossbar_kernel_opamp_identity():
+    """g_pos == g_neg must give exactly zero (op-amp difference)."""
+    v = jnp.ones((8, 8))
+    g = jnp.full((8, 8), 0.5)
+    out = crossbar_vmm(v, g, g, jnp.asarray([8.0]), tm=8, tn=8, tk=8)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)

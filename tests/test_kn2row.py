@@ -1,0 +1,116 @@
+"""kn2row algorithm (paper §III.B): equivalence with direct conv + im2col."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kn2row
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+@pytest.mark.parametrize("l", [1, 3, 5, 7])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_kn2row_matches_direct(l, padding):
+    img = _rand(0, (2, 5, 12, 11))
+    ker = _rand(1, (7, 5, l, l))
+    got = kn2row.conv2d_kn2row(img, ker, padding=padding)
+    want = kn2row.conv2d_direct(img, ker, padding=padding)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("l1,l2", [(1, 3), (3, 1), (2, 2), (3, 5)])
+def test_kn2row_rectangular(l1, l2):
+    img = _rand(2, (1, 3, 9, 10))
+    ker = _rand(3, (4, 3, l1, l2))
+    got = kn2row.conv2d_kn2row(img, ker, padding="SAME")
+    want = kn2row.conv2d_direct(img, ker, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_im2col_matches_direct(padding):
+    img = _rand(4, (2, 6, 10, 10))
+    ker = _rand(5, (8, 6, 3, 3))
+    got = kn2row.conv2d_im2col(img, ker, padding=padding)
+    want = kn2row.conv2d_direct(img, ker, padding=padding)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    c=st.integers(1, 5),
+    n=st.integers(1, 6),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    l=st.sampled_from([1, 2, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kn2row_property(b, c, n, h, w, l, seed):
+    """Property: kn2row == direct conv for any shape with l <= min(h, w)."""
+    if l > min(h, w):
+        l = 1
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    img = jax.random.normal(k1, (b, c, h, w))
+    ker = jax.random.normal(k2, (n, c, l, l))
+    got = kn2row.conv2d_kn2row(img, ker, padding="SAME")
+    want = kn2row.conv2d_direct(img, ker, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+# ---------------- 1-D causal (xLSTM / RecurrentGemma path) ----------------
+
+
+@pytest.mark.parametrize("l", [1, 2, 4, 7])
+def test_conv1d_depthwise_causal(l):
+    x = _rand(6, (3, 16, 8))
+    w = _rand(7, (l, 8))
+    got = kn2row.conv1d_depthwise_causal(x, w)
+    want = kn2row.conv1d_depthwise_causal_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_conv1d_causal_is_causal():
+    """Changing x[t0] must not affect outputs before t0."""
+    x = _rand(8, (1, 12, 4))
+    w = _rand(9, (4, 4))
+    y0 = kn2row.conv1d_depthwise_causal(x, w)
+    x2 = x.at[:, 6, :].add(100.0)
+    y1 = kn2row.conv1d_depthwise_causal(x2, w)
+    np.testing.assert_allclose(y0[:, :6], y1[:, :6], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(y0[:, 6:], y1[:, 6:])
+
+
+@pytest.mark.parametrize("l", [1, 3, 4])
+def test_conv1d_dense_causal_matches_lax(l):
+    x = _rand(10, (2, 10, 6))
+    k = _rand(11, (l, 6, 9))
+    got = kn2row.conv1d_causal_kn2row(x, k)
+    # oracle: pad left, NCW conv
+    xp = jnp.pad(x, ((0, 0), (l - 1, 0), (0, 0))).transpose(0, 2, 1)
+    kr = k.transpose(2, 1, 0)  # (c_out, c_in, l)
+    want = jax.lax.conv_general_dilated(
+        xp, kr, (1,), "VALID", dimension_numbers=("NCH", "OIH", "NCH")
+    ).transpose(0, 2, 1)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 20), c=st.integers(1, 8), l=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1d_property(t, c, l, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (1, t, c))
+    w = jax.random.normal(k2, (l, c))
+    got = kn2row.conv1d_depthwise_causal(x, w)
+    want = kn2row.conv1d_depthwise_causal_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)

@@ -1,0 +1,116 @@
+"""Launch-path tests: the dry-run machinery end-to-end on a tiny mesh
+(subprocess, because the 512-device XLA flag must be set before jax
+init), sharding-rule unit tests, input specs."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke
+from repro.dist import sharding as shd
+from repro.launch import steps as steps_mod
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ----------------------------- sharding rules --------------------------------
+
+
+def test_spec_for_leaf_divisibility_fallback():
+    mesh_shape = {"data": 16, "model": 16}
+    # 15 heads do not divide 16 -> replicated, embed 960 divides -> sharded
+    spec = shd.spec_for_leaf(("embed", "q_heads"), (960, 15 * 64),
+                             shd.TRAIN_RULES, mesh_shape)
+    assert spec == P("data", "model")
+    spec = shd.spec_for_leaf(("heads", None, None), (15, 64, 64),
+                             shd.TRAIN_RULES, mesh_shape)
+    assert spec == P(None, None, None)
+
+
+def test_experts_ep_rule():
+    mesh_shape = {"data": 16, "model": 16}
+    # 16 experts shard over model; 40 do not
+    assert shd.spec_for_leaf(("experts", "embed", "mlp"), (16, 64, 64),
+                             shd.TRAIN_RULES, mesh_shape)[0] == "model"
+    assert shd.spec_for_leaf(("experts", "embed", "mlp"), (40, 64, 64),
+                             shd.TRAIN_RULES, mesh_shape)[0] is None
+
+
+def test_serve_rules_disable_fsdp():
+    mesh_shape = {"data": 16, "model": 16}
+    spec = shd.spec_for_leaf(("embed", "mlp"), (1024, 4096),
+                             shd.SERVE_RULES, mesh_shape)
+    assert spec == P(None, "model")
+
+
+def test_axes_trees_match_param_trees():
+    """Every arch: the logical-axes tree must be congruent with the param
+    tree (same structure, rank-matching tuples)."""
+    from repro.models import get_model
+    for arch in ("smollm-360m", "xlstm-125m", "recurrentgemma-2b",
+                 "granite-moe-3b-a800m", "seamless-m4t-medium", "qwen2-vl-2b"):
+        cfg = get_smoke(arch)
+        api = get_model(cfg)
+        shapes = jax.eval_shape(lambda c=cfg, a=api: a.init(jax.random.PRNGKey(0), c))
+        axes = api.axes(cfg)
+        def chk(ax, sd):
+            assert isinstance(ax, tuple) and len(ax) == len(sd.shape), (arch, ax, sd.shape)
+        jax.tree.map(chk, axes, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ------------------------------ input specs ----------------------------------
+
+
+def test_input_specs_shapes():
+    cfg = get_config("qwen2-72b")
+    sp = steps_mod.input_specs(cfg, "train_4k")
+    assert sp["tokens"].shape == (256, 4096)
+    sp = steps_mod.input_specs(cfg, "prefill_32k")
+    assert sp["tokens"].shape == (32, 32768)
+    sp = steps_mod.input_specs(cfg, "decode_32k")
+    assert sp["tokens"].shape == (128, 1)
+    assert sp["caches"]["k"].shape == (80, 128, 8, 32768, 128)
+
+
+def test_long_500k_gate():
+    ok, _ = steps_mod.shape_applicable(get_config("qwen2-72b"), "long_500k")
+    assert not ok
+    ok, _ = steps_mod.shape_applicable(get_config("xlstm-125m"), "long_500k")
+    assert ok
+    ok, _ = steps_mod.shape_applicable(get_config("recurrentgemma-2b"), "long_500k")
+    assert ok
+
+
+def test_vlm_and_encdec_specs_have_prefix():
+    assert "prefix_embeds" in steps_mod.input_specs(
+        get_config("qwen2-vl-2b"), "train_4k")
+    assert "prefix_embeds" in steps_mod.input_specs(
+        get_config("seamless-m4t-medium"), "prefill_32k")
+
+
+# --------------------------- dry-run smoke (subprocess) ----------------------
+
+
+@pytest.mark.parametrize("arch,shape,mesh", [
+    ("smollm-360m", "train_4k", "multi"),
+    ("granite-moe-3b-a800m", "decode_32k", "single"),
+    ("xlstm-125m", "long_500k", "multi"),
+])
+def test_dryrun_smoke_cell(tmp_path, arch, shape, mesh):
+    """Full launch path (mesh, shardings, lower, compile, roofline) on a
+    tiny mesh with reduced configs."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp_path), "--smoke"],
+        cwd=REPO, capture_output=True, text=True, timeout=540,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert "[ok]" in r.stdout, r.stdout + r.stderr[-2000:]
+    cell = json.loads((tmp_path / f"{arch}__{shape}__{mesh}.json").read_text())
+    assert cell["status"] == "ok"
+    assert cell["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert cell["hlo_cost"]["flops"] > 0

@@ -1,0 +1,131 @@
+"""3D stack mapping: plane/layer accounting (§III.C), the paper's worked
+example (§III.D), and the functional 3D MKMC simulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossbar as xbar
+from repro.core import kn2row, mapping3d
+
+
+def test_plan_3x3_fits_16_layers():
+    """Paper: '16 layers are enough to handle a typical kernel size 3x3'."""
+    p = mapping3d.plan_mapping(n=64, c=64, l1=3, l2=3, h=56, w=56,
+                               spec=mapping3d.Stack3DSpec(layers=16))
+    assert p.taps == 9
+    assert p.layers_used == 10        # odd l^2 -> one dummy layer
+    assert p.dummy_layers == 1
+    assert p.voltage_planes == 6      # layers/2 + 1 (worked example: 6)
+    assert p.current_planes == 5      # layers/2   (worked example: 5)
+    assert p.passes == 1
+    assert p.logical_cycles == 56 * 56
+
+
+def test_plan_5x5_needs_two_passes():
+    """Paper: smaller stacks 'must repeat the computation more than twice';
+    16 layers handle 5x5 (26 layers incl. dummy) in two passes."""
+    p = mapping3d.plan_mapping(n=32, c=16, l1=5, l2=5, h=28, w=28,
+                               spec=mapping3d.Stack3DSpec(layers=16))
+    assert p.taps == 25
+    assert p.layers_used == 26
+    assert p.passes == 2
+
+
+def test_plan_even_taps_no_dummy():
+    p = mapping3d.plan_mapping(n=8, c=8, l1=2, l2=2, h=4, w=4)
+    assert p.layers_used == 4 and p.dummy_layers == 0
+
+
+def test_plan_tiling():
+    p = mapping3d.plan_mapping(n=300, c=200, l1=3, l2=3, h=10, w=10,
+                               spec=mapping3d.Stack3DSpec(layers=16, wl_per_plane=128,
+                                                          bl_per_plane=128))
+    assert p.tiles_c == 2 and p.tiles_n == 3
+    assert p.total_cycles == 1 * 2 * 3 * 100
+
+
+def test_odd_even_layer_invariant():
+    for l in (1, 2, 3, 4, 5, 7):
+        p = mapping3d.plan_mapping(4, 4, l, l, 8, 8)
+        assert p.layers_used % 2 == 0, "shared WL/BL structure needs even layers"
+        assert p.layers_used - p.taps in (0, 1)
+
+
+# ------------------- §III.D worked example: edge detection ------------------
+
+
+def _paper_kernels():
+    """Kernel 0: 4 negative taps, 5 non-negative (Laplacian-like);
+    kernel 1: 1 negative tap, 8 non-negative.  Three channels, same values
+    per channel -- exactly the paper's Fig. 7 setup."""
+    k0 = np.array([[0, -1, 0], [-1, 4, -1], [0, -1, 0]], dtype=np.float32)
+    k1 = np.array([[1, 1, 1], [1, 8, 1], [1, -1, 1]], dtype=np.float32)
+    kernel = np.stack([k0, k1])[:, None, :, :].repeat(3, axis=1)  # (2, 3, 3, 3)
+    return jnp.asarray(kernel)
+
+
+def test_assign_layers_worked_example():
+    kernel = _paper_kernels()
+    assign = mapping3d.assign_layers(kernel)
+    a0, a1 = assign
+    # Kernel 0: 4 negative taps below the separation plane, 5 non-negative above.
+    assert a0.n_neg_layers == 4 and a0.n_pos_layers == 5
+    assert a0.separation_plane == 2          # paper: 'separation plane is voltage plane 2'
+    assert a0.layers_needed == 10            # 9 taps + dummy
+    # Kernel 1: 1 negative tap, 8 non-negative.
+    assert a1.n_neg_layers == 1 and a1.n_pos_layers == 8
+    assert a1.separation_plane == 1          # paper: 'separation plane is voltage plane 1'
+    assert not a0.mixed_tap_ids and not a1.mixed_tap_ids
+
+
+def test_assign_layers_mixed_sign_split():
+    """Generalization: a tap with mixed-sign channels occupies a layer in
+    BOTH groups (split), never exceeding the differential baseline's 2x."""
+    k = np.zeros((1, 2, 1, 1), dtype=np.float32)
+    k[0, 0, 0, 0] = 1.0
+    k[0, 1, 0, 0] = -1.0
+    (a,) = mapping3d.assign_layers(jnp.asarray(k))
+    assert a.mixed_tap_ids == (0,)
+    assert a.n_neg_layers == 1 and a.n_pos_layers == 1
+    assert a.layers_needed == 2
+
+
+def test_zero_taps_count_nonnegative():
+    k = np.zeros((1, 3, 3, 3), dtype=np.float32)
+    (a,) = mapping3d.assign_layers(jnp.asarray(k))
+    assert a.n_neg_layers == 0 and a.n_pos_layers == 9
+
+
+# ------------------------- functional 3D simulation -------------------------
+
+
+def test_mkmc_3d_high_precision_matches_conv():
+    img = jax.random.normal(jax.random.PRNGKey(0), (1, 3, 12, 12))
+    ker = _paper_kernels()
+    cfg = xbar.CrossbarConfig(weight_bits=14, dac_bits=14, adc_bits=18, g_on_off_ratio=1e9)
+    got = mapping3d.mkmc_3d(img, ker, cfg=cfg)
+    want = kn2row.conv2d_direct(img, ker)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_mkmc_3d_ideal_is_exact():
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 9, 9))
+    ker = jax.random.normal(jax.random.PRNGKey(2), (5, 4, 3, 3))
+    cfg = xbar.CrossbarConfig(scheme="ideal")
+    got = mapping3d.mkmc_3d(img, ker, cfg=cfg)
+    want = kn2row.conv2d_direct(img, ker)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mkmc_3d_channel_tiling():
+    """c larger than wl_per_plane exercises the multi-crossbar digital
+    accumulation path."""
+    img = jax.random.normal(jax.random.PRNGKey(3), (1, 40, 8, 8))
+    ker = jax.random.normal(jax.random.PRNGKey(4), (6, 40, 3, 3))
+    spec = mapping3d.Stack3DSpec(layers=16, wl_per_plane=16, bl_per_plane=16)
+    cfg = xbar.CrossbarConfig(weight_bits=14, dac_bits=14, adc_bits=18, g_on_off_ratio=1e9)
+    got = mapping3d.mkmc_3d(img, ker, spec=spec, cfg=cfg)
+    want = kn2row.conv2d_direct(img, ker)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
